@@ -1,0 +1,57 @@
+"""Shared benchmark infrastructure.
+
+Every benchmark module exposes `run(scale: str) -> list[Row]`, one per
+paper table/figure.  `scale` is "quick" (CI-sized, minutes) or "paper"
+(full protocol sizes).  Output rows are `name,us_per_call,derived` CSV
+per the harness convention: `us_per_call` is the wall-time cost of one
+unit of the benchmark's work, `derived` the headline metric string.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+
+OUTPUT_DIR = Path(os.environ.get("REPRO_BENCH_OUT", "bench_results"))
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def scale() -> str:
+    return os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+    def us(self, n_calls: int = 1) -> float:
+        return self.seconds * 1e6 / max(n_calls, 1)
+
+
+def save_json(name: str, payload) -> Path:
+    OUTPUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUTPUT_DIR / f"{name}.json"
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return p
+
+
+def geomean(xs) -> float:
+    import numpy as np
+    xs = np.asarray([x for x in xs if np.isfinite(x) and x > 0])
+    return float(np.exp(np.mean(np.log(xs)))) if len(xs) else float("nan")

@@ -1,0 +1,110 @@
+"""Assemble the data-driven tables of EXPERIMENTS.md from artifacts:
+  * artifacts/dryrun/dryrun_{16x16,2x16x16}.json  (launch/dryrun.py)
+  * artifacts/perf/*.json                          (launch/hillclimb.py)
+  * bench_results/*.json                           (benchmarks/run.py)
+
+Usage: PYTHONPATH=src python -m benchmarks.report > tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+from .roofline import analyze_cell
+
+
+def dryrun_table() -> str:
+    out = ["| arch | shape | mesh | status | args/dev | temp/dev | "
+           "coll ops | compile |",
+           "|---|---|---|---|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        p = Path(f"artifacts/dryrun/dryrun_{mesh}.json")
+        if not p.exists():
+            continue
+        data = json.loads(p.read_text())
+        for key, r in sorted(data.items()):
+            arch, shape = key.split("|")
+            if r.get("skip_reason"):
+                out.append(f"| {arch} | {shape} | {mesh} | SKIP: "
+                           f"{r['skip_reason']} | | | | |")
+                continue
+            m = r.get("memory") or {}
+            out.append(
+                f"| {arch} | {shape} | {mesh} | OK | "
+                f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} GiB | "
+                f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} GiB | "
+                f"{r['collectives']['n_ops']} | {r['compile_s']:.0f}s |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    p = Path("artifacts/dryrun/dryrun_16x16.json")
+    data = json.loads(p.read_text())
+    out = ["| arch | shape | compute | mem lo–hi | collective | bound | "
+           "frac(lo) | frac(hi) | useful | one-line lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for key, r in sorted(data.items()):
+        if not r.get("ok"):
+            continue
+        c = analyze_cell(r)
+        lever = _lever(c)
+        out.append(
+            f"| {c['arch']} | {c['shape']} | "
+            f"{c['compute_s']*1e3:.1f} ms | "
+            f"{c['memory_s_lo']*1e3:.1f}–{c['memory_s_hi']*1e3:.0f} ms | "
+            f"{c['collective_s']*1e3:.1f} ms | {c['bound_hi']} | "
+            f"{c['roofline_fraction']:.3f} | "
+            f"{c['roofline_fraction_hi']:.3f} | "
+            f"{c['usefulness']:.2f} | {lever} |")
+    return "\n".join(out)
+
+
+def _lever(c: dict) -> str:
+    coll_share = c["collective_s"] / max(c["step_s_hi"], 1e-12)
+    if c["shape"].startswith("decode") or c["shape"] == "long_500k":
+        return "batch decode wider / quantize KV"
+    cfg = get_config(c["arch"])
+    if coll_share > 0.4 and cfg.d_model <= 2048:
+        return "drop TP (dp_only): activations too small for 16-way TP"
+    if coll_share > 0.4:
+        return "overlap FSDP gathers; no_remat trades memory for fewer"
+    if c["bound_hi"] == "compute":
+        return "no_remat (cut recompute); DOSA-tuned tiles"
+    return "microbatch to cut live temp; fuse gathers"
+
+
+def perf_table() -> str:
+    out = []
+    for p in sorted(Path("artifacts/perf").glob("*.json")):
+        data = json.loads(p.read_text())
+        cell = p.stem
+        out.append(f"\n**{cell}**\n")
+        out.append("| variant | compute | mem(hi) | collective | "
+                   "step(hi) | Δstep vs baseline |")
+        out.append("|---|---|---|---|---|---|")
+        base = data.get("baseline", {}).get("step_s")
+        for name, r in data.items():
+            delta = ("—" if name == "baseline" or not base else
+                     f"{(1 - r['step_s']/base)*100:+.0f}%")
+            out.append(
+                f"| {name} | {r['compute_s']*1e3:.0f} ms | "
+                f"{r['memory_s']*1e3:.0f} ms | "
+                f"{r['collective_s']*1e3:.0f} ms | "
+                f"{r['step_s']*1e3:.0f} ms | {delta} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single pod, 16x16)\n")
+    print(roofline_table())
+    print("\n## Perf variants\n")
+    print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Sec. Roofline: three-term roofline per (arch x shape) cell from the
+dry-run artifacts (artifacts/dryrun/dryrun_16x16.json).
+
+Per cell:
+  compute_s    = HLO_FLOPs/dev / 197e12
+  memory_s     = HLO_bytes/dev / 819e9
+  collective_s = collective_bytes/dev / 50e9
+  bound        = argmax
+  MODEL_FLOPS  = 6*N_active*D (train) / 2*N_active*D (decode/prefill)
+  usefulness   = MODEL_FLOPS / HLO_FLOPs   (remat/redundancy waste)
+  roofline_fraction = MODEL_FLOPS_time / step_time (the MFU-at-roofline
+                      score for compute; reported per cell)
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.tpu_model import TPU_V5E, model_flops, step_roofline
+
+from .common import Row, save_json
+
+ARTIFACT = Path("artifacts/dryrun/dryrun_16x16.json")
+N_CHIPS = 256
+
+
+def analyze_cell(rec: dict) -> dict:
+    """Two memory bounds are reported (EXPERIMENTS.md Sec. Roofline):
+
+    * mem_hi — cost_analysis "bytes accessed": every HLO op's operand
+      and result bytes; an *upper* bound on HBM traffic (on TPU, fusion
+      and in-place cache updates eliminate most of it);
+    * mem_lo — memory_analysis argument+output bytes: the step's live
+      working set touched at least once (params + optimizer state +
+      batch + caches); a *lower* bound.
+
+    `bound`/`step_s` use mem_lo + a remat-aware activation estimate is
+    not attempted — the conservative (`_hi`) and optimistic (`_lo`)
+    roofline fractions bracket the truth."""
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mem = rec.get("memory") or {}
+    arg_bytes = mem.get("argument_size_in_bytes", 0.0)
+    out_bytes = mem.get("output_size_in_bytes", 0.0)
+    hi = step_roofline(rec["flops"], rec["bytes_accessed"],
+                       rec["collectives"]["total"])
+    lo = step_roofline(rec["flops"], arg_bytes + out_bytes,
+                       rec["collectives"]["total"])
+    train = shape.mode == "train"
+    tokens = (shape.tokens if shape.mode != "decode"
+              else shape.global_batch)
+    mf = model_flops(cfg.n_active_params(), tokens, train)
+    mf_dev = mf / N_CHIPS
+    useful = mf_dev / rec["flops"] if rec["flops"] else 0.0
+    ideal_s = mf_dev / TPU_V5E.peak_flops
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": hi.compute_s,
+        "memory_s_hi": hi.memory_s, "memory_s_lo": lo.memory_s,
+        "collective_s": hi.collective_s,
+        "bound_hi": hi.bound, "bound_lo": lo.bound,
+        "bound": lo.bound,
+        "step_s_hi": hi.step_s, "step_s_lo": lo.step_s,
+        "step_s": lo.step_s,
+        "model_flops_per_dev": mf_dev,
+        "usefulness": useful,
+        "roofline_fraction_hi": (ideal_s / hi.step_s
+                                 if hi.step_s else 0.0),
+        "roofline_fraction": (ideal_s / lo.step_s
+                              if lo.step_s else 0.0),
+        "arg_bytes_per_dev": arg_bytes,
+        "temp_bytes_per_dev": mem.get("temp_size_in_bytes", 0.0),
+    }
+
+
+def run(scale: str = "quick") -> list[Row]:
+    if not ARTIFACT.exists():
+        return [Row("roofline", 0.0,
+                    "SKIPPED: run `python -m repro.launch.dryrun --all` "
+                    "first")]
+    data = json.loads(ARTIFACT.read_text())
+    rows, table = [], []
+    for key, rec in sorted(data.items()):
+        if not rec.get("ok"):
+            if rec.get("skip_reason"):
+                rows.append(Row(f"roofline_{rec['arch']}_{rec['shape']}",
+                                0.0, f"SKIP:{rec['skip_reason']}"))
+            continue
+        cell = analyze_cell(rec)
+        table.append(cell)
+        rows.append(Row(
+            f"roofline_{cell['arch']}_{cell['shape']}",
+            cell["step_s"] * 1e6,
+            f"bound={cell['bound']} comp={cell['compute_s']*1e3:.2f}ms "
+            f"mem={cell['memory_s_lo']*1e3:.2f}-"
+            f"{cell['memory_s_hi']*1e3:.0f}ms "
+            f"coll={cell['collective_s']*1e3:.2f}ms "
+            f"frac={cell['roofline_fraction']:.3f} "
+            f"useful={cell['usefulness']:.2f}"))
+    save_json("roofline", table)
+    if table:
+        worst = min(table, key=lambda c: c["roofline_fraction"])
+        coll = max(table, key=lambda c: (c["collective_s"]
+                                         / max(c["step_s"], 1e-12)))
+        rows.append(Row("roofline_summary", 0.0,
+                        f"cells={len(table)} "
+                        f"worst_frac={worst['arch']}:{worst['shape']}="
+                        f"{worst['roofline_fraction']:.3f} "
+                        f"most_collective={coll['arch']}:{coll['shape']}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scale via
+REPRO_BENCH_SCALE={quick|paper} (default quick); select benchmarks with
+``python -m benchmarks.run fig4 fig7 ...``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from .common import scale
+
+BENCHES = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10_11", "fig12",
+           "roofline", "tpu_autotune")
+
+_MODULES = {
+    "fig4": "benchmarks.fig4_correlation",
+    "fig6": "benchmarks.fig6_loop_ordering",
+    "fig7": "benchmarks.fig7_cosearch",
+    "fig8": "benchmarks.fig8_baseline_accels",
+    "fig9": "benchmarks.fig9_hw_map_separation",
+    "fig10_11": "benchmarks.fig10_11_pred_accuracy",
+    "fig12": "benchmarks.fig12_rtl_opt",
+    "roofline": "benchmarks.roofline",
+    "tpu_autotune": "benchmarks.tpu_autotune",
+}
+
+
+def main() -> None:
+    import importlib
+    selected = sys.argv[1:] or list(BENCHES)
+    sc = scale()
+    print(f"# repro benchmarks  scale={sc}")
+    print("name,us_per_call,derived")
+    failures = []
+    for key in selected:
+        try:
+            mod = importlib.import_module(_MODULES[key])
+            for row in mod.run(sc):
+                print(row.csv(), flush=True)
+        except Exception:
+            failures.append(key)
+            traceback.print_exc()
+            print(f"{key},nan,FAILED", flush=True)
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Beyond-paper benchmark: the DOSA-TPU one-loop autotuner (DESIGN.md
+Sec. 5) vs naive block choices for representative matmul shapes drawn
+from the assigned architectures.  Reports the predicted-latency gain of
+DOSA-GD-tuned Pallas BlockSpecs over a fixed 128^3 baseline, plus the
+tuner's own cost (us per tuned shape)."""
+from __future__ import annotations
+
+from repro.core.autotune import tune_matmul_blocks
+from repro.core.tpu_model import matmul_latency
+
+from .common import Row, Timer, geomean, save_json
+
+# (name, M, N, K): per-device GEMM shards from the production mesh
+SHAPES = [
+    ("qwen3_ffn_up", 4096 * 16, 3072 // 16, 1024),
+    ("kimi_expert", 8192, 2048, 7168 // 16),
+    ("nemotron_qkv", 4096 * 16, 18432 // 16, 18432 // 16),
+    ("gemma_ffn", 4096 * 16, 24576 // 16, 3072),
+    ("vocab_head", 4096 * 16, 256000 // 16, 3072),
+]
+
+
+def run(scale: str = "quick") -> list[Row]:
+    steps = 300 if scale == "paper" else 120
+    rows, gains = [], []
+    detail = {}
+    for name, m, n, k in SHAPES:
+        with Timer() as t:
+            res = tune_matmul_blocks(m, n, k, steps=steps)
+        base_lat, _ = matmul_latency(m, n, k, 128.0, 128.0, 128.0)
+        gain = float(base_lat) / res.latency_s
+        gains.append(gain)
+        detail[name] = {"blocks": res.blocks,
+                        "latency_ms": res.latency_s * 1e3,
+                        "baseline_ms": float(base_lat) * 1e3,
+                        "gain": gain}
+        rows.append(Row(f"tpu_autotune_{name}", t.us(),
+                        f"blocks={res.blocks} "
+                        f"lat={res.latency_s*1e3:.2f}ms "
+                        f"vs128^3={gain:.2f}x"))
+    save_json("tpu_autotune", detail)
+    rows.append(Row("tpu_autotune_summary", 0.0,
+                    f"geomean_gain_vs_128^3={geomean(gains):.2f}x"))
+    return rows

@@ -1,0 +1,29 @@
+"""DOSA accelerator co-search for an assigned LM architecture — the
+paper's technique applied beyond its own workloads: lower qwen3-0.6b
+prefill into the 7-dim layer algebra and co-design a Gemmini-class
+accelerator for it.
+
+    PYTHONPATH=src python examples/dosa_search_lm.py [arch] [shape]
+"""
+import sys
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.search import SearchConfig, dosa_search
+from repro.workloads.lm_extract import extract
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3_0_6b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "prefill_32k"
+
+cfg = get_config(arch)
+wl = extract(cfg, SHAPES[shape])
+print(f"{cfg.name} x {shape}: {len(wl)} unique GEMM layers, "
+      f"{wl.total_macs/1e12:.2f} TMACs")
+for layer in wl.layers:
+    print(f"  {layer.name:16s} dims={layer.dims} x{layer.repeat}")
+
+res = dosa_search(wl, SearchConfig(steps=300, round_every=150,
+                                   n_start_points=2, seed=0))
+print(f"\nbest EDP: {res.best_edp:.4e}")
+print(f"hardware: {res.best_hw.pe_dim}x{res.best_hw.pe_dim} PEs, "
+      f"acc {res.best_hw.acc_kb:.0f} KB, sp {res.best_hw.sp_kb:.0f} KB")

@@ -1,0 +1,22 @@
+"""Quickstart: DOSA one-loop co-search on ResNet-50 in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.search import SearchConfig, dosa_search
+from repro.workloads.dnn_zoo import resnet50
+
+wl = resnet50()
+print(f"workload: {wl.name} ({len(wl)} unique layers, "
+      f"{wl.total_macs/1e9:.1f} GMACs)")
+
+cfg = SearchConfig(steps=300, round_every=150, n_start_points=2, seed=0)
+res = dosa_search(wl, cfg)
+
+print(f"\nbest EDP: {res.best_edp:.4e}  (uJ x cycles)")
+print(f"start-point EDPs: {['%.2e' % e for e in res.start_edps]}")
+print(f"improvement over best start: "
+      f"{min(res.start_edps)/res.best_edp:.2f}x")
+print(f"model evaluations: {res.n_evals}")
+print(f"inferred minimal hardware: {res.best_hw.pe_dim}x"
+      f"{res.best_hw.pe_dim} PEs, {res.best_hw.acc_kb:.0f} KB "
+      f"accumulator, {res.best_hw.sp_kb:.0f} KB scratchpad")

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a small qwen3-family model for a few
+hundred steps on synthetic data, with checkpoint/restart exercised
+mid-run.  The production-size path is the same code via
+`python -m repro.launch.train --arch qwen3_0_6b` on a TPU slice.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.models.lm import build_model
+from repro.runtime.fault_tolerance import (DriverConfig,
+                                           train_with_recovery)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+# ~10M-param qwen3-family config (CPU-trainable in minutes; the 0.6B
+# and larger assigned configs run the same code on real hardware).
+cfg = dataclasses.replace(
+    get_config("qwen3_0_6b"), n_layers=4, d_model=256, n_heads=4,
+    n_kv_heads=2, head_dim=64, d_ff=768, vocab_size=4096,
+    compute_dtype="float32")
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+n = sum(p.size for p in jax.tree.leaves(params))
+print(f"model: {n/1e6:.1f}M params ({cfg.n_layers}L d={cfg.d_model})")
+
+tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=30, b2=0.98))
+train_step, init_opt = make_train_step(model, tcfg)
+opt_state = init_opt(tcfg.opt, params)
+data_cfg = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=256,
+                      global_batch=4)
+
+# inject one simulated node failure to demonstrate recovery
+fired = {"done": False}
+def fault(step):
+    if step == args.steps // 2 and not fired["done"]:
+        fired["done"] = True
+        raise RuntimeError("injected failure (simulated preemption)")
+
+params, opt_state, report = train_with_recovery(
+    jax.jit(train_step), params, opt_state, data_cfg,
+    DriverConfig(total_steps=args.steps, ckpt_every=50,
+                 ckpt_dir=args.ckpt_dir, log_every=50),
+    fault_hook=fault)
+
+first, last = report.losses[0], float(np.mean(report.losses[-20:]))
+print(f"\nloss {first:.3f} -> {last:.3f} over {report.steps_run} steps "
+      f"({report.restarts} restart(s), recovered from checkpoint)")
+assert last < first, "loss did not fall"
+assert report.restarts == 1
+print("OK")

@@ -1,0 +1,125 @@
+"""Sharded, atomic, mesh-agnostic checkpointing.
+
+Layout:  <dir>/step_<N>/
+           meta.json           (step, arch, flat key list, dtypes)
+           arrays.npz          (flat param + opt-state arrays)
+         <dir>/LATEST          (atomic pointer file)
+
+Arrays are saved logically (unsharded); on restore they are
+`jax.device_put` with whatever shardings the *current* mesh prescribes,
+so a checkpoint written on a (16,16) mesh restores onto (2,16,16) or a
+single CPU device unchanged — this is the elastic-rescale path.
+Writes go to a temp dir + atomic rename: a host crash mid-write never
+corrupts LATEST."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _lists(root)
+
+
+def _lists(node):
+    """Convert {'0':..,'1':..} dicts back to tuples."""
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(k.isdigit() for k in keys):
+        return tuple(_lists(node[str(i)]) for i in range(len(keys)))
+    return {k: _lists(v) for k, v in node.items()}
+
+
+def save(ckpt_dir: str | Path, step: int, state: dict,
+         extra_meta: dict | None = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    meta = {"step": step, "keys": sorted(arrays),
+            "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+            **(extra_meta or {})}
+
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        np.savez(tmp / "arrays.npz", **{
+            k: (a.view(np.uint16) if a.dtype == jax.numpy.bfloat16
+                else a) for k, a in arrays.items()})
+        with open(tmp / "meta.json", "w") as f:
+            json.dump(meta, f)
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic pointer update
+    ptr_tmp = ckpt_dir / ".LATEST.tmp"
+    ptr_tmp.write_text(final.name)
+    os.replace(ptr_tmp, ckpt_dir / "LATEST")
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ptr = Path(ckpt_dir) / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (Path(ckpt_dir) / name / "meta.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | Path, step: int | None = None,
+            shardings=None) -> tuple[int, dict]:
+    """Load (step, state).  `shardings`: optional pytree of
+    jax.sharding.Sharding congruent with the state — arrays are placed
+    onto the current mesh (the elastic-rescale path)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    with open(d / "meta.json") as f:
+        meta = json.load(f)
+    with np.load(d / "arrays.npz") as z:
+        flat = {}
+        for k in meta["keys"]:
+            a = z[k]
+            if meta["dtypes"][k] == "bfloat16":
+                a = a.view(jax.numpy.bfloat16)
+            flat[k] = a
+    state = _unflatten(flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings)
+    return meta["step"], state

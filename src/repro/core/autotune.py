@@ -1,0 +1,139 @@
+"""DOSA one-loop gradient search over TPU kernel/framework knobs.
+
+The paper's loop, verbatim, on the adapted model (`tpu_model`):
+log-domain factors -> Adam -> divisor rounding (Sec. 5.3.2) -> pick the
+best rounded candidate by the analytical model.  Hardware is fixed
+silicon, so the mapping-first hardware inference becomes the VMEM
+feasibility penalty — the one-loop property (no inner mapping search)
+is preserved.
+
+Tuned objects:
+  * Pallas matmul block shapes (bm, bk, bn) — `tune_matmul_blocks`,
+  * flash-attention block shapes — `tune_flash_blocks`,
+  * both consumed by `repro/kernels/*` and the Sec. Perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import TPU_V5E, TPUTarget
+from .problem import divisors
+from .tpu_model import matmul_latency, vmem_penalty
+
+
+def round_block(dim: int, target: float) -> int:
+    """Nearest divisor of `dim` to `target` (Sec. 5.3.2 rounding)."""
+    best, bestd = 1, abs(1 - target)
+    for d in divisors(int(dim)):
+        if abs(d - target) < bestd:
+            best, bestd = d, abs(d - target)
+    return best
+
+
+@dataclasses.dataclass
+class TuneResult:
+    blocks: tuple[int, int, int]
+    latency_s: float
+    compute_s: float
+    memory_s: float
+    vmem_bytes: float
+    history: list
+
+
+def tune_matmul_blocks(m: int, n: int, k: int, dtype_bytes: float = 2.0,
+                       steps: int = 300, lr: float = 0.05,
+                       penalty: float = 100.0, seed: int = 0,
+                       target: TPUTarget = TPU_V5E) -> TuneResult:
+    """One-loop GD over log(bm, bn, bk); returns rounded best."""
+
+    def loss(theta):
+        bm, bn, bk = jnp.exp(theta)
+        lat, _ = matmul_latency(m, n, k, bm, bn, bk, dtype_bytes,
+                                target)
+        pen = vmem_penalty(bm, bn, bk, dtype_bytes, target)
+        # block must not exceed the problem
+        over = (jnp.maximum(bm / m - 1.0, 0.0)
+                + jnp.maximum(bn / n - 1.0, 0.0)
+                + jnp.maximum(bk / k - 1.0, 0.0))
+        return jnp.log(lat) + penalty * (pen + over)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    theta = jnp.log(jnp.asarray(
+        [min(m, 256.0), min(n, 256.0), min(k, 512.0)]))
+    m_t = jnp.zeros(3)
+    v_t = jnp.zeros(3)
+    history = []
+    best = None
+    for t in range(1, steps + 1):
+        val, g = grad_fn(theta)
+        m_t = 0.9 * m_t + 0.1 * g
+        v_t = 0.999 * v_t + 0.001 * g * g
+        theta = theta - lr * (m_t / (1 - 0.9 ** t)) / (
+            jnp.sqrt(v_t / (1 - 0.999 ** t)) + 1e-8)
+        if t % 50 == 0 or t == steps:
+            cand = _round_and_eval(m, n, k, np.exp(np.asarray(theta)),
+                                   dtype_bytes, target)
+            history.append((t, cand[1]))
+            if best is None or cand[1] < best[1]:
+                best = cand
+    blocks, lat, aux = best
+    return TuneResult(blocks=blocks, latency_s=lat,
+                      compute_s=float(aux["compute_s"]),
+                      memory_s=float(aux["memory_s"]),
+                      vmem_bytes=float(
+                          _fp(blocks, dtype_bytes)),
+                      history=history)
+
+
+def _fp(blocks, dtype_bytes):
+    from .tpu_model import vmem_footprint
+    bm, bn, bk = blocks
+    return vmem_footprint(bm, bn, bk, dtype_bytes)
+
+
+def _round_and_eval(m, n, k, b_cont, dtype_bytes, target):
+    """Round continuous blocks to divisors; prefer MXU-aligned
+    candidates (multiples of (8,128) within the divisor set)."""
+    cands = []
+    for bm in _aligned_divisors(m, b_cont[0], 8):
+        for bn in _aligned_divisors(n, b_cont[1], 128):
+            for bk in _aligned_divisors(k, b_cont[2], 128):
+                lat, aux = matmul_latency(m, n, k, float(bm), float(bn),
+                                          float(bk), dtype_bytes,
+                                          target)
+                pen = float(vmem_penalty(bm, bn, bk, dtype_bytes,
+                                         target))
+                if pen > 0:
+                    continue
+                cands.append(((bm, bn, bk), float(lat),
+                              {kk: float(vv) for kk, vv in aux.items()}))
+    if not cands:
+        b = (round_block(m, b_cont[0]), round_block(n, b_cont[1]),
+             round_block(k, b_cont[2]))
+        lat, aux = matmul_latency(m, n, k, *map(float, b), dtype_bytes,
+                                  target)
+        return b, float(lat), {kk: float(vv) for kk, vv in aux.items()}
+    return min(cands, key=lambda c: c[1])
+
+
+def _aligned_divisors(dim: int, center: float, align: int,
+                      width: float = 4.0) -> list[int]:
+    """Divisors of dim within [center/width, center*width], preferring
+    `align` multiples; always non-empty."""
+    divs = divisors(int(dim))
+    window = [d for d in divs if center / width <= d <= center * width]
+    aligned = [d for d in window if d % align == 0 or d == dim]
+    out = aligned or window or [round_block(dim, center)]
+    return sorted(set(out))[:8]
+
+
+@functools.lru_cache(maxsize=256)
+def default_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Cached DOSA-tuned blocks for the kernel wrappers."""
+    res = tune_matmul_blocks(m, n, k, steps=120)
+    return res.blocks

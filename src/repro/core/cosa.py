@@ -1,0 +1,107 @@
+"""CoSA stand-in: a constrained heuristic mapper for start points.
+
+The paper seeds gradient descent with CoSA [11] mappings (a Gurobi MIP
+scheduler).  Offline we replace it with a greedy prime-factor allocator
+that honours the same constraints CoSA is configured with in the paper:
+
+* valid divisors only, products equal the problem dims;
+* spatial factors bounded by the PE array;
+* scratchpad partitioned equally between inputs and weights (Sec. 6.1);
+* accumulator capacity respected;
+* loop ordering chosen to minimize EDP (27-way enumeration).
+
+Its role in DOSA is only "performant start point / constant mapper"; the
+Fig. 9 protocol (constant-mapper comparison) uses it identically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .arch import ACC, DRAM, REG, SP, GemminiHW
+from .mapping import (ORDER_TABLE, SPATIAL, TEMPORAL, Mapping)
+from .model import ordering_combos
+from .oracle import _caps, evaluate
+from .problem import C, K, N, NDIMS, P, Q, R, S, I_T, W_T, Layer, divisors
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    best = 1
+    for d in divisors(n):
+        if d <= cap:
+            best = d
+    return best
+
+
+def cosa_map(layer: Layer, hw: GemminiHW,
+             optimize_order: bool = False) -> Mapping:
+    """Greedy utilization-maximizing valid mapping for `layer` on `hw`.
+
+    `optimize_order=False` (default) emits the Gemmini-conventional
+    weight-stationary loop order at every level — CoSA proper does not
+    optimize DOSA's ordering objective, and the paper's Fig. 6
+    "Baseline" runs without ordering search.  Set True for an
+    ordering-tuned constant mapper."""
+    dims = np.asarray(layer.dims, dtype=np.int64)
+    f = np.ones((2, 4, NDIMS), dtype=float)
+    remaining = dims.copy()
+
+    # Spatial: fill the array as far as divisors allow (Eq. 1 semantics).
+    sc = _largest_divisor_leq(int(remaining[C]), hw.pe_dim)
+    f[SPATIAL, ACC, C] = sc
+    remaining[C] //= sc
+    sk = _largest_divisor_leq(int(remaining[K]), hw.pe_dim)
+    f[SPATIAL, SP, K] = sk
+    remaining[K] //= sk
+
+    # Greedy temporal allocation, innermost->outermost.  Each site grows
+    # its factor to the largest divisor that keeps every buffer within
+    # its budget (scratchpad budget split half inputs / half weights).
+    sites = [
+        (TEMPORAL, REG, Q), (TEMPORAL, REG, P), (TEMPORAL, REG, N),
+        (TEMPORAL, ACC, Q), (TEMPORAL, ACC, P), (TEMPORAL, ACC, N),
+        (TEMPORAL, SP, C), (TEMPORAL, SP, R), (TEMPORAL, SP, S),
+        (TEMPORAL, SP, K), (TEMPORAL, SP, Q), (TEMPORAL, SP, P),
+    ]
+
+    def fits(fc: np.ndarray) -> bool:
+        m = Mapping(f=fc, order=np.zeros(4, dtype=np.int64))
+        caps = _caps(m, layer)
+        if caps[ACC, 2] > hw.acc_words:      # outputs only (Eq. 5 / B)
+            return False
+        if caps[SP, W_T] > hw.sp_words / 2 or caps[SP, I_T] > hw.sp_words / 2:
+            return False
+        return True
+
+    for (k, lvl, d) in sites:
+        best = 1
+        for cand in divisors(int(remaining[d])):
+            trial = f.copy()
+            trial[k, lvl, d] *= cand
+            if fits(trial):
+                best = cand
+            else:
+                break
+        f[k, lvl, d] *= best
+        remaining[d] //= best
+
+    for d in range(NDIMS):
+        f[TEMPORAL, DRAM, d] = remaining[d]
+
+    if not optimize_order:
+        return Mapping(f=f, order=np.zeros(4, dtype=np.int64))  # WS all
+
+    # Ordering: exhaustive 27-way, oracle-EDP per layer.
+    best_order, best_edp = None, float("inf")
+    for combo in ordering_combos():
+        m = Mapping(f=f.copy(), order=np.asarray(combo, dtype=np.int64))
+        r = evaluate(m, layer, hw=hw, quantize_dram=False)
+        if r.edp < best_edp:
+            best_edp, best_order = r.edp, np.asarray(combo, dtype=np.int64)
+    if best_order is None:        # nothing fits: keep WS default
+        best_order = np.zeros(4, dtype=np.int64)
+    return Mapping(f=f, order=best_order)
+
+
+def cosa_map_workload(layers, hw: GemminiHW,
+                      optimize_order: bool = False) -> list[Mapping]:
+    return [cosa_map(l, hw, optimize_order=optimize_order) for l in layers]

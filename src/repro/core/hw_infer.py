@@ -1,0 +1,42 @@
+"""Mapping-first minimal hardware parameterization (Sec. 4.1, Fig. 3).
+
+Converts a set of layerwise (integer) mappings into the minimal Gemmini
+configuration that supports all of them: per-parameter max across
+layers, PE array capped at 128x128, SRAM sizes rounded up to 1 KB
+(Sec. 6.1).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .arch import (ACC, MAX_PE_DIM, SP, SRAM_ROUND_BYTES, WORD_BYTES,
+                   GemminiHW)
+from .mapping import SPATIAL, Mapping
+from .oracle import _caps
+from .problem import C, K, I_T, O_T, W_T, Layer
+
+
+def minimal_hw(mappings: list[Mapping], layers: list[Layer]) -> GemminiHW:
+    pe_dim, acc_words, sp_words = 1, 0.0, 0.0
+    for m, layer in zip(mappings, layers):
+        caps = _caps(m, layer)
+        pe_dim = max(pe_dim,
+                     int(round(m.f[SPATIAL, ACC, C])),
+                     int(round(m.f[SPATIAL, SP, K])))
+        acc_words = max(acc_words, float(caps[ACC, O_T]))
+        sp_words = max(sp_words, float(caps[SP, W_T] + caps[SP, I_T]))
+    pe_dim = min(pe_dim, MAX_PE_DIM)
+    acc_kb = math.ceil(acc_words * WORD_BYTES[ACC] / SRAM_ROUND_BYTES)
+    sp_kb = math.ceil(sp_words * WORD_BYTES[SP] / SRAM_ROUND_BYTES)
+    return GemminiHW(pe_dim=pe_dim, acc_kb=float(max(acc_kb, 1)),
+                     sp_kb=float(max(sp_kb, 1)))
+
+
+def random_hw(rng: np.random.Generator) -> GemminiHW:
+    """Random valid hardware design (start-point generation, Sec. 5.1)."""
+    pe_dim = int(2 ** rng.integers(2, 8))          # 4..128
+    acc_kb = float(2 ** rng.integers(3, 10))       # 8 KB .. 512 KB
+    sp_kb = float(2 ** rng.integers(5, 12))        # 32 KB .. 2 MB
+    return GemminiHW(pe_dim=pe_dim, acc_kb=acc_kb, sp_kb=sp_kb)

@@ -1,0 +1,129 @@
+"""Mapping representation and loop orderings.
+
+A mapping for one layer is:
+
+* `f[2, 4, 7]` — spatial (row 0) and temporal (row 1) tiling factors per
+  memory level per problem dimension (Sec. 3.1.2).  The Gemmini WS
+  dataflow fixes spatial factors to 1 everywhere except `f[S, ACC, C]`
+  (input channels across array rows, spatially reduced) and
+  `f[S, SP, K]` (output channels across array columns, broadcast inputs)
+  — Eq. 1 and Sec. 5.1.
+
+* `order[4]` — per-level loop-ordering choice in {WS, IS, OS}
+  (Sec. 5.2).  Only levels >= 1 influence traffic (fills into level i
+  depend on loop orders at levels j > i).
+
+Constraint: for every dimension d, prod over (k, i) of f[k, i, d] equals
+the problem size (Sec. 3.1.2).  During gradient descent the DRAM temporal
+factor is *inferred* (Sec. 5.3.3), so the constraint holds by
+construction in continuous space.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .arch import ACC, DRAM, NLEVELS, REG, SP
+from .problem import C, K, N, NDIMS, P, Q, R, S
+
+SPATIAL, TEMPORAL = 0, 1
+
+# Positions of the two free spatial factors in the Gemmini WS dataflow.
+SPATIAL_SITES = ((ACC, C), (SP, K))
+
+# ---------------------------------------------------------------------------
+# Loop orderings (Sec. 5.2): three named per-level dim orders, innermost
+# first.  X-stationary places the dims *irrelevant* to tensor X innermost,
+# maximizing X's reuse at that level boundary.
+# ---------------------------------------------------------------------------
+WS_ORD, IS_ORD, OS_ORD = 0, 1, 2
+ORDER_NAMES = ("WS", "IS", "OS")
+# innermost -> outermost
+ORDER_TABLE = np.array(
+    [
+        [P, Q, N, R, S, C, K],  # WS: P,Q,N (irrelevant to W) innermost
+        [K, R, S, P, Q, C, N],  # IS: K (irrelevant to I) innermost
+        [R, S, C, P, Q, K, N],  # OS: R,S,C (irrelevant to O) innermost
+    ],
+    dtype=np.int64,
+)
+NORDERS = 3
+
+
+@dataclasses.dataclass
+class Mapping:
+    """Concrete (integer) mapping for one layer."""
+
+    f: np.ndarray       # (2, 4, 7) float or int factors
+    order: np.ndarray   # (4,) int in {0, 1, 2}
+
+    def copy(self) -> "Mapping":
+        return Mapping(f=self.f.copy(), order=self.order.copy())
+
+    def spatial(self, level: int, dim: int) -> float:
+        return float(self.f[SPATIAL, level, dim])
+
+    def validate(self, dims: np.ndarray, atol: float = 1e-6) -> None:
+        """Raise if factor products don't match problem dims or fixed
+        spatial sites are violated."""
+        prod = self.f.prod(axis=(0, 1))
+        if not np.allclose(prod, dims, rtol=1e-6, atol=atol):
+            raise ValueError(f"factor products {prod} != dims {dims}")
+        mask = np.ones((NLEVELS, NDIMS), dtype=bool)
+        for lvl, d in SPATIAL_SITES:
+            mask[lvl, d] = False
+        if not np.allclose(self.f[SPATIAL][mask], 1.0):
+            raise ValueError("spatial factor outside Gemmini WS sites")
+
+
+def identity_mapping(dims: np.ndarray) -> Mapping:
+    """Everything at DRAM — the trivially valid (and slow) mapping."""
+    f = np.ones((2, NLEVELS, NDIMS), dtype=float)
+    f[TEMPORAL, DRAM, :] = np.asarray(dims, dtype=float)
+    return Mapping(f=f, order=np.zeros(NLEVELS, dtype=np.int64))
+
+
+def random_mapping(dims: np.ndarray, rng: np.random.Generator,
+                   max_pe_dim: int = 128) -> Mapping:
+    """Uniform-ish random valid integer mapping: per dim, split the prime
+    factorization across (spatial sites + temporal levels 0..2 + DRAM)."""
+    from .problem import divisors
+
+    f = np.ones((2, NLEVELS, NDIMS), dtype=float)
+    for d in range(NDIMS):
+        remaining = int(dims[d])
+        # Sites that may receive factors of dim d, inner to outer.  The
+        # register level holds exactly one weight per PE (Gemmini WS),
+        # so only weight-irrelevant dims (P, Q, N) may tile there.
+        sites: list[tuple[int, int]] = []
+        if d in (P, Q, N):
+            sites.append((TEMPORAL, REG))
+        sites += [(TEMPORAL, ACC), (TEMPORAL, SP)]
+        if d == C:
+            sites.insert(len(sites) - 2, (SPATIAL, ACC))
+        if d == K:
+            sites.insert(len(sites) - 1, (SPATIAL, SP))
+        for (k, lvl) in sites:
+            divs = [x for x in divisors(remaining)]
+            if k == SPATIAL:
+                divs = [x for x in divs if x <= max_pe_dim]
+            pick = int(rng.choice(divs))
+            f[k, lvl, d] = pick
+            remaining //= pick
+        f[TEMPORAL, DRAM, d] = remaining
+    order = rng.integers(0, NORDERS, size=NLEVELS)
+    return Mapping(f=f, order=order.astype(np.int64))
+
+
+def stack_mappings(mappings: list[Mapping]) -> tuple[np.ndarray, np.ndarray]:
+    """(L, 2, 4, 7) factors and (L, 4) orders for a whole workload."""
+    f = np.stack([m.f for m in mappings]).astype(float)
+    o = np.stack([m.order for m in mappings]).astype(np.int64)
+    return f, o
+
+
+def unstack_mappings(f: np.ndarray, order: np.ndarray) -> list[Mapping]:
+    return [Mapping(f=np.asarray(f[i], dtype=float),
+                    order=np.asarray(order[i], dtype=np.int64))
+            for i in range(f.shape[0])]

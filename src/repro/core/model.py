@@ -1,0 +1,308 @@
+"""DOSA's closed-form differentiable performance model (paper Sec. 4).
+
+Implements, in pure `jax.numpy` (differentiable w.r.t. the tiling
+factors `f`):
+
+* per-level capacity requirements  (Eqs. 2-5),
+* traffic: writes / updates / reads with spatial broadcast and
+  reduction discounts                (Eqs. 6-11),
+* roofline latency                   (Eq. 12),
+* event-based energy with capacity-dependent SRAM energy-per-access
+  (Eq. 13, Table 2),
+* network EDP                        (Eq. 14),
+* mapping-first minimal-hardware inference (Eq. 1, Fig. 3).
+
+Exact semantics (validated against the paper's Fig. 3 worked example and
+mirrored by the independent iterative oracle in `oracle.py`):
+
+  capacity   C[i,t] = prod_{d in size-dims(t)} ext(i,d)
+             ext(i,d) = prod_{j<=i} f[T,j,d] * prod_{all j} f[S,j,d]
+             (temporal loops at-or-below the level set the resident tile;
+              spatial loops at *any* level multiply instances/banks);
+             inputs use sliding-window extents
+             Pin = wstride*(ext(P)-1)+ext(R), Qin likewise (Eq. 3).
+
+  fills(t,i) = C[i,t] * prod of temporal factors at levels j>i that are
+             at-or-outer-to the innermost t-relevant loop with factor>1,
+             per the level loop orderings (Eq. 6).  No relevant outer
+             loop => the tile is loaded exactly once.
+
+  reads(t,i) = MACs / F_S,t(i)            at t's innermost level
+             = fills(t, prev)/F_S,t(i)    above it          (Eqs. 10-11)
+             F_S,t(i) = prod of spatial factors at level i of dims
+             irrelevant to t (broadcast / spatial-reduction discount).
+
+  outputs    updates(acc) = MACs / F_S,O(acc); a *residency* count
+             Nres = fills(O, acc); read-modify-write reads =
+             updates - Nres (first update of a residency hits a fresh
+             slot); each residency drains once (DRAM updates = Nres,
+             accumulator drain reads = Nres); partial-sum refetch
+             traffic = Nres - |O| (zero when reduction loops stay inner)
+             (Eqs. 8-9 plus Timeloop's first-touch correction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import (ACC, DRAM, EPA_MAC, MAX_PE_DIM, NLEVELS, REG, SP,
+                   bandwidth_words_per_cycle, epa_per_level)
+from .mapping import ORDER_TABLE, SPATIAL, TEMPORAL
+from .problem import (C, K, N, NDIMS, P, Q, R, S, REL, SIZE_DIMS, I_T, O_T,
+                      W_T)
+
+_ORDER_TABLE_J = jnp.asarray(ORDER_TABLE)
+_REL_J = jnp.asarray(REL.astype(np.float32))
+
+# Tensor -> storage levels (from Table 4's B matrix), innermost first.
+TENSOR_LEVELS = {W_T: (REG, SP, DRAM), I_T: (SP, DRAM), O_T: (ACC, DRAM)}
+
+_EPS = 1e-6
+
+
+class LayerMetrics(NamedTuple):
+    latency: jnp.ndarray          # cycles
+    energy: jnp.ndarray           # pJ
+    accesses: jnp.ndarray         # (4,) per-level word accesses
+    caps: jnp.ndarray             # (4, 3) capacity requirement words
+    macs: jnp.ndarray             # scalar
+    compute_latency: jnp.ndarray  # cycles
+    mem_latency: jnp.ndarray      # (4,) per-level cycles
+
+
+# ---------------------------------------------------------------------------
+# Capacities
+# ---------------------------------------------------------------------------
+
+def _extents(f: jnp.ndarray) -> jnp.ndarray:
+    """ext[i, d]: dimension-d extent of the tile resident at level i.
+    f: (2, 4, 7)."""
+    tcum = jnp.cumprod(f[TEMPORAL], axis=0)        # (4, 7) temporal j<=i
+    sall = jnp.prod(f[SPATIAL], axis=0)            # (7,)   spatial all j
+    return tcum * sall[None, :]
+
+
+def capacities(f: jnp.ndarray, strides: jnp.ndarray) -> jnp.ndarray:
+    """(4, 3) words of tensor t resident at level i (Eqs. 2-5)."""
+    ext = _extents(f)                              # (4, 7)
+    c_w = ext[:, R] * ext[:, S] * ext[:, C] * ext[:, K]
+    pin = strides[0] * (ext[:, P] - 1.0) + ext[:, R]
+    qin = strides[1] * (ext[:, Q] - 1.0) + ext[:, S]
+    c_i = ext[:, C] * ext[:, N] * pin * qin
+    c_o = ext[:, P] * ext[:, Q] * ext[:, K] * ext[:, N]
+    return jnp.stack([c_w, c_i, c_o], axis=1)      # (4, 3)
+
+
+# ---------------------------------------------------------------------------
+# Traffic
+# ---------------------------------------------------------------------------
+
+def _nest_above(f: jnp.ndarray, order: jnp.ndarray, level: int):
+    """Flattened temporal loop nest strictly above `level`, innermost
+    first.  Returns (factors, rel) with shapes (n, ) and (3, n)."""
+    fs, rels = [], []
+    for j in range(level + 1, NLEVELS):
+        perm = jnp.take(_ORDER_TABLE_J, order[j], axis=0)      # (7,)
+        fs.append(jnp.take(f[TEMPORAL, j], perm))              # (7,)
+        rels.append(jnp.take(_REL_J, perm, axis=1))            # (3, 7)
+    if not fs:
+        return jnp.zeros((0,)), jnp.zeros((3, 0))
+    return jnp.concatenate(fs), jnp.concatenate(rels, axis=1)
+
+
+def _fill_multiplier(nest_f: jnp.ndarray, nest_rel: jnp.ndarray):
+    """Masked product over the flattened nest (Eq. 6 reuse rule).
+    nest_f: (n,), nest_rel: (n,) in {0,1}.  A loop's factor multiplies the
+    fills iff the loop is relevant, or some relevant loop with factor > 1
+    lies strictly inner to it."""
+    active = nest_rel * (nest_f > 1.0 + _EPS)                  # (n,)
+    seen_excl = jnp.cumsum(active) - active                    # strictly inner
+    include = jnp.maximum(nest_rel, (seen_excl > 0.0))
+    return jnp.prod(jnp.where(include > 0.0, nest_f, 1.0))
+
+
+def spatial_discount(f: jnp.ndarray, tensor: int, level: int) -> jnp.ndarray:
+    """F_S,t(i): product of spatial factors at `level` of dims irrelevant
+    to `tensor` (Eqs. 8, 10)."""
+    irrel = 1.0 - _REL_J[tensor]                               # (7,)
+    return jnp.prod(jnp.where(irrel > 0.0, f[SPATIAL, level], 1.0))
+
+
+def fills(f: jnp.ndarray, order: jnp.ndarray, strides: jnp.ndarray,
+          caps: jnp.ndarray) -> jnp.ndarray:
+    """(4, 3) fill (write-from-above) traffic per level per tensor."""
+    out = jnp.zeros((NLEVELS, 3))
+    for t, levels in TENSOR_LEVELS.items():
+        for i in levels:
+            nest_f, nest_rel = _nest_above(f, order, i)
+            mult = _fill_multiplier(nest_f, nest_rel[t]) if nest_f.shape[0] \
+                else jnp.asarray(1.0)
+            out = out.at[i, t].set(caps[i, t] * mult)
+    return out
+
+
+class Traffic(NamedTuple):
+    reads: jnp.ndarray      # (4,) word reads per level
+    writes: jnp.ndarray     # (4,) word writes per level (fills + updates)
+    accesses: jnp.ndarray   # (4,) reads + writes
+
+
+def traffic(f: jnp.ndarray, order: jnp.ndarray, strides: jnp.ndarray,
+            caps: jnp.ndarray, macs: jnp.ndarray) -> Traffic:
+    """Per-level read/write word traffic (Eqs. 6-11 + first-touch)."""
+    fl = fills(f, order, strides, caps)
+    reads = jnp.zeros(NLEVELS)
+    writes = jnp.zeros(NLEVELS)
+
+    # --- read-only tensors W, I: fills go down the chain as reads above.
+    for t in (W_T, I_T):
+        levels = TENSOR_LEVELS[t]
+        inner = levels[0]
+        reads = reads.at[inner].add(macs / spatial_discount(f, t, inner))
+        for pos in range(1, len(levels)):
+            i, prev = levels[pos], levels[pos - 1]
+            reads = reads.at[i].add(fl[prev, t] / spatial_discount(f, t, i))
+        for i in levels:
+            if i != DRAM:               # data is born in DRAM; no fill there
+                writes = writes.at[i].add(fl[i, t])
+
+    # --- outputs: accumulate at ACC, drain/refetch against DRAM.
+    acc, top = TENSOR_LEVELS[O_T]
+    upd_acc = macs / spatial_discount(f, O_T, acc)   # Eq. 9, innermost
+    nres = fl[acc, O_T]                              # residencies (words)
+    osize = caps[top, O_T]                           # distinct output words
+    refetch = jnp.maximum(nres - osize, 0.0)
+    writes = writes.at[acc].add(upd_acc + refetch)   # updates + refetch fill
+    reads = reads.at[acc].add((upd_acc - nres) + nres)  # RMW reads + drains
+    writes = writes.at[top].add(nres)                # DRAM output updates
+    reads = reads.at[top].add(refetch)               # DRAM partial refetch
+
+    return Traffic(reads=reads, writes=writes, accesses=reads + writes)
+
+
+# ---------------------------------------------------------------------------
+# Latency / energy / EDP
+# ---------------------------------------------------------------------------
+
+def utilized_pes(f: jnp.ndarray) -> jnp.ndarray:
+    return jnp.prod(f[SPATIAL])
+
+
+def layer_c_pe(f: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1: square array sized by the larger spatial factor."""
+    return jnp.maximum(f[SPATIAL, ACC, C], f[SPATIAL, SP, K]) ** 2
+
+
+def layer_metrics(f: jnp.ndarray, order: jnp.ndarray, strides: jnp.ndarray,
+                  c_pe: jnp.ndarray, acc_words: jnp.ndarray,
+                  sp_words: jnp.ndarray) -> LayerMetrics:
+    """Latency (Eq. 12) and energy (Eq. 13) of one layer's mapping given
+    hardware parameters (which may be shared across layers)."""
+    caps = capacities(f, strides)
+    macs = jnp.prod(f)
+    tr = traffic(f, order, strides, caps, macs)
+
+    bw = bandwidth_words_per_cycle(c_pe)
+    mem_lat = jnp.stack([tr.accesses[i] / bw[i] for i in range(NLEVELS)])
+    compute_lat = macs / utilized_pes(f)
+    latency = jnp.maximum(compute_lat, jnp.max(mem_lat))
+
+    epa = epa_per_level(c_pe, acc_words, sp_words)
+    energy = macs * EPA_MAC + sum(tr.accesses[i] * epa[i]
+                                  for i in range(NLEVELS))
+    return LayerMetrics(latency=latency, energy=energy,
+                        accesses=tr.accesses, caps=caps, macs=macs,
+                        compute_latency=compute_lat, mem_latency=mem_lat)
+
+
+class HWParams(NamedTuple):
+    c_pe: jnp.ndarray       # total PEs (pe_dim^2)
+    acc_words: jnp.ndarray  # accumulator capacity requirement, words
+    sp_words: jnp.ndarray   # scratchpad capacity requirement, words
+
+
+def infer_hw(fs: jnp.ndarray, strides: jnp.ndarray) -> HWParams:
+    """Mapping-first minimal hardware (Fig. 3): per-parameter max over
+    layers.  Differentiable (max is subdifferentiable).
+    fs: (L, 2, 4, 7), strides: (L, 2)."""
+    caps = jax.vmap(capacities)(fs, strides)        # (L, 4, 3)
+    c_pe = jnp.max(jax.vmap(layer_c_pe)(fs))
+    c_pe = jnp.minimum(c_pe, float(MAX_PE_DIM) ** 2)
+    acc_words = jnp.max(caps[:, ACC, O_T])          # B-masked (Eq. 5)
+    sp_words = jnp.max(caps[:, SP, W_T] + caps[:, SP, I_T])
+    return HWParams(c_pe=c_pe, acc_words=acc_words, sp_words=sp_words)
+
+
+def workload_eval(fs: jnp.ndarray, orders: jnp.ndarray, strides: jnp.ndarray,
+                  repeats: jnp.ndarray, hw: HWParams | None = None):
+    """Evaluate a whole network (Eq. 14).
+
+    fs: (L, 2, 4, 7) factors; orders: (L, 4); strides: (L, 2);
+    repeats: (L,).  `hw=None` => mapping-first co-search mode (hardware
+    inferred from the mappings, Eq. 1/Fig. 3).  Returns
+    (edp, (energies, latencies, hw))."""
+    if hw is None:
+        hw = infer_hw(fs, strides)
+    metrics = jax.vmap(
+        lambda f, o, s: layer_metrics(f, o, s, hw.c_pe, hw.acc_words,
+                                      hw.sp_words))(fs, orders, strides)
+    energies = metrics.energy * repeats
+    latencies = metrics.latency * repeats
+    edp = jnp.sum(energies) * jnp.sum(latencies)
+    return edp, (energies, latencies, hw)
+
+
+def workload_edp(fs, orders, strides, repeats, hw: HWParams | None = None):
+    return workload_eval(fs, orders, strides, repeats, hw)[0]
+
+
+# ---------------------------------------------------------------------------
+# Validity penalty (Eq. 18) and fixed-hardware capacity penalties
+# ---------------------------------------------------------------------------
+
+def validity_penalty(fs: jnp.ndarray) -> jnp.ndarray:
+    """sum max(1 - f, 0) over all factors (Sec. 5.3.3)."""
+    return jnp.sum(jnp.maximum(1.0 - fs, 0.0))
+
+
+def capacity_penalty(fs: jnp.ndarray, strides: jnp.ndarray,
+                     hw: HWParams) -> jnp.ndarray:
+    """Relative overflow of fixed buffers — used when hardware is frozen
+    (Sec. 6.5: buffer-size/mapping-only search)."""
+    caps = jax.vmap(capacities)(fs, strides)
+    acc_req = caps[:, ACC, O_T]
+    sp_req = caps[:, SP, W_T] + caps[:, SP, I_T]
+    over_acc = jnp.maximum(acc_req / hw.acc_words - 1.0, 0.0)
+    over_sp = jnp.maximum(sp_req / hw.sp_words - 1.0, 0.0)
+    pe = jax.vmap(layer_c_pe)(fs)
+    over_pe = jnp.maximum(pe / hw.c_pe - 1.0, 0.0)
+    return jnp.sum(over_acc + over_sp + over_pe)
+
+
+# ---------------------------------------------------------------------------
+# Loop-ordering enumeration helpers (Sec. 5.2)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def ordering_combos() -> np.ndarray:
+    """(27, 4) all per-level ordering choices for levels ACC/SP/DRAM
+    (REG's ordering never affects traffic)."""
+    combos = []
+    for a in range(3):
+        for b in range(3):
+            for c in range(3):
+                combos.append((0, a, b, c))
+    return np.array(combos, dtype=np.int64)
+
+
+def layer_el_all_orderings(f, strides, c_pe, acc_words, sp_words):
+    """Energy & latency of one layer under all 27 ordering combos.
+    Returns (energies (27,), latencies (27,))."""
+    combos = jnp.asarray(ordering_combos())
+    m = jax.vmap(lambda o: layer_metrics(f, o, strides, c_pe, acc_words,
+                                         sp_words))(combos)
+    return m.energy, m.latency

@@ -1,0 +1,223 @@
+"""Iterative Timeloop-style oracle (the paper's "Timeloop" stand-in).
+
+An *independent* implementation of the accelerator performance model as
+an iterative per-level program in plain Python/numpy — the style of
+model the paper converts into its closed-form differentiable
+counterpart.  `benchmarks/fig4_correlation.py` correlates
+`core/model.py` against this oracle exactly as the paper's Fig. 4
+correlates DOSA against Timeloop.
+
+Deliberate fidelity details:
+
+* integer arithmetic over a validated integer mapping;
+* walks the loop nest explicitly (per level, per loop position) to
+  compute reuse, instead of the closed-form masked products;
+* quantizes DRAM traffic to `DRAM_BLOCK_WORDS` blocks with a ceiling —
+  the behaviour the paper names as the source of its small-layer
+  Fig. 4 outliers ("Timeloop uses a ceiling function to compute energy
+  based on the number of blocks accessed in DRAM");
+* rejects invalid mappings (capacity overflow under fixed hardware,
+  non-divisor factors, PE overflow) by returning `inf`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .arch import (ACC, DRAM, DRAM_BLOCK_WORDS, EPA_MAC, NLEVELS, REG, SP,
+                   GemminiHW, bandwidth_words_per_cycle, epa_per_level)
+from .mapping import ORDER_TABLE, SPATIAL, TEMPORAL, Mapping
+from .problem import (C, K, N, NDIMS, P, Q, R, S, REL, I_T, O_T, W_T, Layer)
+
+TENSOR_LEVELS = {W_T: (REG, SP, DRAM), I_T: (SP, DRAM), O_T: (ACC, DRAM)}
+
+
+@dataclasses.dataclass
+class OracleResult:
+    latency: float
+    energy: float
+    edp: float
+    accesses: np.ndarray        # (4,)
+    caps: np.ndarray            # (4, 3)
+    valid: bool
+    reason: str = ""
+
+
+def _tile_extent(m: Mapping, level: int, dim: int) -> int:
+    """Extent of dimension `dim` in the tile resident at `level`:
+    temporal loops at-or-below the level, spatial loops anywhere."""
+    ext = 1
+    for j in range(0, level + 1):
+        ext *= int(round(m.f[TEMPORAL, j, dim]))
+    for j in range(NLEVELS):
+        ext *= int(round(m.f[SPATIAL, j, dim]))
+    return ext
+
+
+def _caps(m: Mapping, layer: Layer) -> np.ndarray:
+    caps = np.zeros((NLEVELS, 3))
+    for i in range(NLEVELS):
+        w = 1
+        for d in (R, S, C, K):
+            w *= _tile_extent(m, i, d)
+        pin = layer.wstride * (_tile_extent(m, i, P) - 1) + _tile_extent(m, i, R)
+        qin = layer.hstride * (_tile_extent(m, i, Q) - 1) + _tile_extent(m, i, S)
+        inp = _tile_extent(m, i, C) * _tile_extent(m, i, N) * pin * qin
+        o = 1
+        for d in (P, Q, K, N):
+            o *= _tile_extent(m, i, d)
+        caps[i] = (w, inp, o)
+    return caps
+
+
+def _fill_multiplier(m: Mapping, level: int, tensor: int) -> int:
+    """Walk the temporal nest above `level` innermost->outermost; a loop
+    contributes iff it's relevant to `tensor`, or some relevant loop with
+    factor > 1 lies strictly inner to it."""
+    mult = 1
+    seen_relevant = False
+    for j in range(level + 1, NLEVELS):
+        order = ORDER_TABLE[int(m.order[j])]
+        for dim in order:                     # innermost -> outermost
+            f = int(round(m.f[TEMPORAL, j, dim]))
+            relevant = bool(REL[tensor, dim])
+            if relevant:
+                mult *= f
+                if f > 1:
+                    seen_relevant = True
+            elif seen_relevant:
+                mult *= f
+    return mult
+
+
+def _spatial_discount(m: Mapping, level: int, tensor: int) -> int:
+    disc = 1
+    for dim in range(NDIMS):
+        if not REL[tensor, dim]:
+            disc *= int(round(m.f[SPATIAL, level, dim]))
+    return disc
+
+
+def evaluate(m: Mapping, layer: Layer, hw: GemminiHW | None = None,
+             quantize_dram: bool = True) -> OracleResult:
+    """Evaluate one layer's mapping.  `hw=None` => mapping-first mode
+    (minimal hardware inferred from this mapping alone)."""
+    dims = np.asarray(layer.dims)
+    # ----- validity
+    prod = m.f.prod(axis=(0, 1))
+    if not np.allclose(prod, dims, rtol=1e-9, atol=1e-6):
+        return _invalid("factor products != dims")
+    if np.any(m.f < 1.0 - 1e-9):
+        return _invalid("factor < 1")
+    fr = np.round(m.f)
+    if not np.allclose(m.f, fr, atol=1e-6):
+        return _invalid("non-integer factors")
+
+    # Gemmini WS registers hold exactly one weight per PE: temporal
+    # factors of weight-relevant dims (R,S,C,K) at the register level
+    # are not realizable.
+    for d in (0, 1, 4, 5):                      # R, S, C, K
+        if int(round(m.f[TEMPORAL, 0, d])) != 1:
+            return _invalid("weight-relevant temporal factor at registers")
+
+    caps = _caps(m, layer)
+    spatial_c = int(round(m.f[SPATIAL, ACC, C]))
+    spatial_k = int(round(m.f[SPATIAL, SP, K]))
+    pe_dim = max(spatial_c, spatial_k)
+    if hw is None:
+        from .arch import MAX_PE_DIM
+        if pe_dim > MAX_PE_DIM:
+            return _invalid("PE array exceeds 128x128 cap")
+        c_pe = pe_dim ** 2
+        acc_words = caps[ACC, O_T]              # B-masked (Eq. 5)
+        sp_words = caps[SP, W_T] + caps[SP, I_T]
+    else:
+        c_pe = hw.c_pe
+        acc_words = hw.acc_words
+        sp_words = hw.sp_words
+        if pe_dim > hw.pe_dim:
+            return _invalid("PE array overflow")
+        if caps[ACC, O_T] > acc_words + 1e-6:
+            return _invalid("accumulator overflow")
+        if caps[SP, W_T] + caps[SP, I_T] > sp_words + 1e-6:
+            return _invalid("scratchpad overflow")
+
+    macs = int(np.prod(dims, dtype=np.float64))
+
+    reads = np.zeros(NLEVELS)
+    writes = np.zeros(NLEVELS)
+    dram_parts: list[float] = []   # per-tensor DRAM traffic components
+    fills = {}
+    for t, levels in TENSOR_LEVELS.items():
+        for i in levels:
+            fills[(t, i)] = caps[i, t] * _fill_multiplier(m, i, t)
+
+    for t in (W_T, I_T):
+        levels = TENSOR_LEVELS[t]
+        reads[levels[0]] += macs / _spatial_discount(m, levels[0], t)
+        for pos in range(1, len(levels)):
+            i, prev = levels[pos], levels[pos - 1]
+            amount = fills[(t, prev)] / _spatial_discount(m, i, t)
+            reads[i] += amount
+            if i == DRAM:
+                dram_parts.append(amount)
+        for i in levels:
+            if i != DRAM:
+                writes[i] += fills[(t, i)]
+
+    acc_lvl, top = TENSOR_LEVELS[O_T]
+    upd = macs / _spatial_discount(m, acc_lvl, O_T)
+    nres = fills[(O_T, acc_lvl)]
+    osize = caps[top, O_T]
+    refetch = max(nres - osize, 0.0)
+    writes[acc_lvl] += upd + refetch
+    reads[acc_lvl] += (upd - nres) + nres
+    writes[top] += nres
+    reads[top] += refetch
+    dram_parts += [nres, refetch]
+
+    accesses = reads + writes
+    if quantize_dram:
+        # Timeloop quantizes each tensor's DRAM transfers to blocks with
+        # a ceiling — the paper's Fig. 4 small-layer outlier mechanism.
+        accesses = accesses.copy()
+        accesses[DRAM] = sum(
+            math.ceil(p / DRAM_BLOCK_WORDS) * DRAM_BLOCK_WORDS
+            for p in dram_parts if p > 0)
+
+    bw = bandwidth_words_per_cycle(float(c_pe))
+    mem_lat = [accesses[i] / bw[i] for i in range(NLEVELS)]
+    compute_lat = macs / (spatial_c * spatial_k)
+    latency = max(compute_lat, max(mem_lat))
+
+    epa = epa_per_level(float(c_pe), float(acc_words), float(sp_words))
+    energy = macs * EPA_MAC + sum(accesses[i] * epa[i]
+                                  for i in range(NLEVELS))
+    return OracleResult(latency=float(latency), energy=float(energy),
+                        edp=float(latency * energy), accesses=accesses,
+                        caps=caps, valid=True)
+
+
+def _invalid(reason: str) -> OracleResult:
+    return OracleResult(latency=float("inf"), energy=float("inf"),
+                        edp=float("inf"), accesses=np.full(NLEVELS, np.inf),
+                        caps=np.zeros((NLEVELS, 3)), valid=False,
+                        reason=reason)
+
+
+def evaluate_workload(mappings: list[Mapping], layers, hw=None,
+                      quantize_dram: bool = True):
+    """Network EDP (Eq. 14): sum energies/latencies across layers (scaled
+    by repeats), multiply the sums."""
+    e_tot, l_tot = 0.0, 0.0
+    results = []
+    for mp, layer in zip(mappings, layers):
+        r = evaluate(mp, layer, hw=hw, quantize_dram=quantize_dram)
+        results.append(r)
+        if not r.valid:
+            return float("inf"), results
+        e_tot += r.energy * layer.repeat
+        l_tot += r.latency * layer.repeat
+    return e_tot * l_tot, results

@@ -1,0 +1,74 @@
+"""Rounding continuous GD factors to valid integer mappings (Sec. 5.3.2).
+
+"Before any mapping is evaluated, it is rounded to the nearest valid
+mapping ... rounding each tiling factor to the nearest divisor of its
+corresponding problem dimension, subject to the constraint that the
+rounding process does not cause the product of tiling factors for that
+dimension to exceed the total problem size.  This process iterates from
+the innermost to the outermost memory level."
+
+We make "nearest divisor subject to the constraint" precise by rounding
+each factor to the nearest divisor of the *remaining* quotient
+(dim / product-of-already-rounded-inner-factors), which guarantees the
+inferred DRAM factor (Sec. 5.3.3) is a positive integer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, REG, SP
+from .mapping import SPATIAL, TEMPORAL, Mapping
+from .problem import C, K, NDIMS, divisors
+
+
+def _nearest_divisor(n: int, x: float, cap: int | None = None) -> int:
+    """Divisor of n nearest to x (ties to the smaller), optionally <= cap."""
+    best, bestd = 1, abs(1 - x)
+    for d in divisors(n):
+        if cap is not None and d > cap:
+            continue
+        dist = abs(d - x)
+        if dist < bestd - 1e-12:
+            best, bestd = d, dist
+    return best
+
+
+# Sites receiving rounded factors, innermost -> outermost, per dim.
+# Register-level temporal tiling is only realizable for weight-irrelevant
+# dims (P, Q, N) on Gemmini WS (one weight register per PE).
+def _sites_for_dim(d: int) -> list[tuple[int, int]]:
+    from .problem import N, P, Q
+    sites: list[tuple[int, int]] = []
+    if d in (P, Q, N):
+        sites.append((TEMPORAL, REG))
+    if d == C:
+        sites.append((SPATIAL, ACC))
+    sites.append((TEMPORAL, ACC))
+    if d == K:
+        sites.append((SPATIAL, SP))
+    sites.append((TEMPORAL, SP))
+    return sites
+
+
+def round_mapping(f: np.ndarray, order: np.ndarray, dims: np.ndarray,
+                  pe_cap: int = MAX_PE_DIM) -> Mapping:
+    """Round continuous factors (2,4,7) to the nearest valid integer
+    mapping; the DRAM temporal factor absorbs the remainder."""
+    f = np.asarray(f, dtype=float)
+    out = np.ones((2, NLEVELS, NDIMS), dtype=float)
+    for d in range(NDIMS):
+        remaining = int(dims[d])
+        for (k, lvl) in _sites_for_dim(d):
+            cap = pe_cap if k == SPATIAL else None
+            val = _nearest_divisor(remaining, float(f[k, lvl, d]), cap=cap)
+            out[k, lvl, d] = val
+            remaining //= val
+        out[TEMPORAL, DRAM, d] = remaining
+    return Mapping(f=out, order=np.asarray(order, dtype=np.int64).copy())
+
+
+def round_all(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
+              pe_cap: int = MAX_PE_DIM) -> list[Mapping]:
+    """Round a whole workload: fs (L,2,4,7), orders (L,4), dims (L,7)."""
+    return [round_mapping(fs[i], orders[i], dims[i], pe_cap=pe_cap)
+            for i in range(fs.shape[0])]

@@ -1,0 +1,331 @@
+"""DOSA one-loop gradient-descent co-search (paper Sec. 5).
+
+Search strategy (Table 5): temporal + spatial tiling factors by GD
+(Adam), spatial dataflow fixed to Gemmini weight-stationary C|K, tensor
+bypass fixed (Table 4), loop ordering by exhaustive enumeration —
+either *iterative* (re-selected after every rounding, Sec. 5.2.1) or
+*softmax-weighted in the loss* (Sec. 5.2.2, Eqs. 15-17).
+
+Protocol details implemented from the paper:
+* start points: random hardware + CoSA-seeded mappings (Sec. 5.1);
+* start-point rejection at 10x the best seen start (Sec. 5.3.1);
+* rounding to nearest-divisor valid mappings every `round_every` steps,
+  innermost->outermost (Sec. 5.3.2);
+* DRAM factors inferred, validity penalty sum max(1-f, 0) (Sec. 5.3.3,
+  Eq. 18);
+* EDP of the full network as the loss (Eq. 14) — we descend log(EDP),
+  a monotone rescaling with identical minimizers that keeps fp32
+  gradients well-conditioned;
+* every differentiable-model step and every oracle evaluation of a
+  rounded mapping counts as one sample (Sec. 6.3 treats them as
+  equivalent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, SP, GemminiHW
+from .cosa import cosa_map_workload
+from .hw_infer import minimal_hw, random_hw
+from .mapping import (NORDERS, SPATIAL, TEMPORAL, Mapping, stack_mappings)
+from .model import (HWParams, capacity_penalty, infer_hw,
+                    layer_el_all_orderings, ordering_combos,
+                    validity_penalty, workload_eval)
+from .oracle import evaluate_workload
+from .problem import C, K, NDIMS, Workload
+from .rounding import round_all
+
+# Free optimization sites: temporal ACC/SP for all dims, temporal REG for
+# weight-irrelevant dims only (one weight register per PE on Gemmini WS),
+# plus the two Gemmini spatial factors.  DRAM temporal is inferred.
+from .problem import N as _N, P as _P, Q as _Q  # noqa: E402
+
+FREE_MASK = np.zeros((2, NLEVELS, NDIMS), dtype=bool)
+FREE_MASK[TEMPORAL, 1:DRAM, :] = True
+FREE_MASK[TEMPORAL, 0, [_P, _Q, _N]] = True
+FREE_MASK[SPATIAL, ACC, C] = True
+FREE_MASK[SPATIAL, SP, K] = True
+_FREE_MASK_J = jnp.asarray(FREE_MASK)
+
+
+def build_f(theta: jnp.ndarray, dims: jnp.ndarray) -> jnp.ndarray:
+    """theta (L,2,4,7) log-factors -> full factor tensor with inferred
+    DRAM temporal factors (Sec. 5.3.3).  dims: (L,7) float."""
+    f = jnp.where(_FREE_MASK_J, jnp.exp(theta), 1.0)
+    inner = jnp.prod(f, axis=(1, 2)) / f[:, TEMPORAL, DRAM, :]
+    f = f.at[:, TEMPORAL, DRAM, :].set(dims / inner)
+    return f
+
+
+def theta_from_mappings(mappings: list[Mapping]) -> np.ndarray:
+    fs, _ = stack_mappings(mappings)
+    theta = np.zeros_like(fs)
+    np.log(np.maximum(fs, 1.0), out=theta, where=FREE_MASK[None])
+    return theta
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    steps: int = 1490
+    round_every: int = 500
+    n_start_points: int = 7
+    lr: float = 0.01
+    penalty_weight: float = 10.0
+    ordering_mode: str = "iterative"   # "none" | "iterative" | "softmax"
+    softmax_temp: float = 10.0
+    fixed_hw: GemminiHW | None = None  # freeze PE dims (Sec. 6.5 mode)
+    fix_pe_only: bool = True           # Sec. 6.5 frees buffer sizes
+    reject_factor: float = 10.0
+    max_reject_tries: int = 10
+    seed: int = 0
+    latency_model: Callable | None = None  # (mappings, workload) -> EDP
+    surrogate: object | None = None        # TrainedModel: GD descends
+    #   through the DNN residual/direct latency model (Sec. 6.5)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_edp: float
+    best_mappings: list[Mapping]
+    best_hw: GemminiHW
+    history: list[tuple[int, float]]   # (cumulative evals, best oracle EDP)
+    n_evals: int
+    start_edps: list[float]
+
+
+# ---------------------------------------------------------------------------
+# Loss functions
+# ---------------------------------------------------------------------------
+
+def _spatial_cap_penalty(f: jnp.ndarray, pe_cap: float) -> jnp.ndarray:
+    s = jnp.stack([f[:, SPATIAL, ACC, C], f[:, SPATIAL, SP, K]])
+    return jnp.sum(jnp.maximum(s / pe_cap - 1.0, 0.0))
+
+
+def make_loss(workload: Workload, cfg: SearchConfig):
+    dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
+    strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
+    repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
+    fixed = cfg.fixed_hw
+    pe_cap = float(fixed.pe_dim if fixed is not None else MAX_PE_DIM)
+    hw_fixed = None
+    if fixed is not None and not cfg.fix_pe_only:
+        hw_fixed = HWParams(c_pe=jnp.asarray(float(fixed.c_pe)),
+                            acc_words=jnp.asarray(float(fixed.acc_words)),
+                            sp_words=jnp.asarray(float(fixed.sp_words)))
+
+    def _surrogate_latency(theta, f, orders, hw, lat_analytical):
+        """Per-layer latency through the learned model (differentiable:
+        features are the log-factors = theta at the free sites)."""
+        from .arch import WORD_BYTES
+        from .surrogate import mlp_apply
+        sur = cfg.surrogate
+        L = f.shape[0]
+        fac = jax.vmap(lambda t: t[FREE_MASK])(theta)         # (L, 23)
+        logdims = jnp.log(dims)                               # (L, 7)
+        oh = jax.nn.one_hot(orders[:, 1:4], 3).reshape(L, 9)
+        pe_dim = jnp.sqrt(hw.c_pe)
+        acc_kb = hw.acc_words * WORD_BYTES[ACC] / 1024.0
+        sp_kb = hw.sp_words * WORD_BYTES[SP] / 1024.0
+        hwf = jnp.stack([jnp.log(pe_dim), jnp.log(acc_kb),
+                         jnp.log(sp_kb)])
+        hwf = jnp.broadcast_to(hwf, (L, 3))
+        feats = jnp.concatenate([logdims, fac, oh, hwf], axis=1)
+        x = (feats - jnp.asarray(sur.x_mean)) / jnp.asarray(sur.x_std)
+        out = mlp_apply(sur.params, x)                        # (L,)
+        from .surrogate import DIRECT_CLIP, RESIDUAL_CLIP
+        if sur.kind == "residual":
+            return lat_analytical * jnp.exp(
+                jnp.clip(out, -RESIDUAL_CLIP, RESIDUAL_CLIP))
+        return jnp.exp(jnp.clip(out, 0.0, DIRECT_CLIP))
+
+    def edp_fixed_orders(f, orders, theta=None):
+        edp, (en, lat, hw) = workload_eval(f, orders, strides, repeats,
+                                           hw=hw_fixed)
+        if cfg.surrogate is not None and theta is not None:
+            lat_a = lat / repeats
+            lat_s = _surrogate_latency(theta, f, orders, hw, lat_a)
+            edp = jnp.sum(en) * jnp.sum(lat_s * repeats)
+        return edp, hw
+
+    def edp_softmax(f, orders):
+        hw = infer_hw(f, strides) if hw_fixed is None else hw_fixed
+        e, l = jax.vmap(lambda fl, s: layer_el_all_orderings(
+            fl, s, hw.c_pe, hw.acc_words, hw.sp_words))(f, strides)
+        inv = jnp.min(e * l, axis=1, keepdims=True) / (e * l)   # (L,27)
+        w = jax.nn.softmax(cfg.softmax_temp * inv, axis=1)       # Eq. 16
+        e_l = jnp.sum(w * e, axis=1) * repeats
+        l_l = jnp.sum(w * l, axis=1) * repeats
+        return jnp.sum(e_l) * jnp.sum(l_l), hw                   # Eq. 17
+
+    def loss(theta, orders):
+        f = build_f(theta, dims)
+        if cfg.ordering_mode == "softmax" and cfg.surrogate is None:
+            edp, _ = edp_softmax(f, orders)
+        else:
+            edp, _ = edp_fixed_orders(f, orders, theta=theta)
+        pen = validity_penalty(f) + _spatial_cap_penalty(f, pe_cap)
+        if hw_fixed is not None:
+            pen = pen + capacity_penalty(f, strides, hw_fixed)
+        return jnp.log(edp) + cfg.penalty_weight * pen
+
+    return jax.jit(jax.value_and_grad(loss)), dims, strides, repeats
+
+
+# ---------------------------------------------------------------------------
+# Adam (pure JAX)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("lr",))
+def adam_step(theta, grad, m, v, t, lr: float, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * grad
+    v = b2 * v + (1 - b2) * grad * grad
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return theta - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+# ---------------------------------------------------------------------------
+# Loop-ordering selection (Sec. 5.2.1): coordinate descent over the 27
+# per-layer combos against overall network EDP (Eq. 14).
+# ---------------------------------------------------------------------------
+
+def select_orderings(fs: np.ndarray, strides: np.ndarray,
+                     repeats: np.ndarray, hw: HWParams,
+                     n_passes: int = 2) -> np.ndarray:
+    combos = ordering_combos()                       # (27, 4)
+    e, l = jax.vmap(lambda f, s: layer_el_all_orderings(
+        f, s, hw.c_pe, hw.acc_words, hw.sp_words))(
+        jnp.asarray(fs), jnp.asarray(strides))
+    e = np.asarray(e) * repeats[:, None]             # (L, 27)
+    l = np.asarray(l) * repeats[:, None]
+    L = fs.shape[0]
+    choice = np.zeros(L, dtype=np.int64)
+    for _ in range(n_passes):
+        e_tot = e[np.arange(L), choice].sum()
+        l_tot = l[np.arange(L), choice].sum()
+        for i in range(L):
+            e_rest = e_tot - e[i, choice[i]]
+            l_rest = l_tot - l[i, choice[i]]
+            edps = (e_rest + e[i]) * (l_rest + l[i])
+            choice[i] = int(np.argmin(edps))
+            e_tot = e_rest + e[i, choice[i]]
+            l_tot = l_rest + l[i, choice[i]]
+    return combos[choice]                            # (L, 4)
+
+
+# ---------------------------------------------------------------------------
+# Main search
+# ---------------------------------------------------------------------------
+
+def _oracle_edp(mappings, workload, cfg) -> float:
+    if cfg.latency_model is not None:
+        return cfg.latency_model(mappings, workload)
+    hw = cfg.fixed_hw
+    if hw is not None and cfg.fix_pe_only:
+        # Sec. 6.5 protocol: PE dims frozen, buffers re-derived minimally.
+        derived = minimal_hw(mappings, list(workload.layers))
+        hw = GemminiHW(pe_dim=cfg.fixed_hw.pe_dim, acc_kb=derived.acc_kb,
+                       sp_kb=derived.sp_kb)
+    edp, _ = evaluate_workload(mappings, workload.layers,
+                               hw=hw if hw is not None else None)
+    return float(edp)
+
+
+def dosa_search(workload: Workload, cfg: SearchConfig) -> SearchResult:
+    rng = np.random.default_rng(cfg.seed)
+    loss_grad, dims_j, strides_j, repeats_j = make_loss(workload, cfg)
+    dims = workload.dims_array()
+    strides = workload.strides_array().astype(float)
+    repeats = workload.repeats_array().astype(float)
+
+    best = SearchResult(best_edp=float("inf"), best_mappings=[],
+                        best_hw=GemminiHW(1, 1.0, 1.0), history=[],
+                        n_evals=0, start_edps=[])
+    evals = 0
+    best_start_edp = float("inf")
+
+    def record(mappings):
+        nonlocal evals
+        edp = _oracle_edp(mappings, workload, cfg)
+        evals += 1
+        if edp < best.best_edp:
+            best.best_edp = edp
+            best.best_mappings = [m.copy() for m in mappings]
+            hw = minimal_hw(mappings, list(workload.layers))
+            if cfg.fixed_hw is not None and cfg.fix_pe_only:
+                hw = GemminiHW(pe_dim=cfg.fixed_hw.pe_dim,
+                               acc_kb=hw.acc_kb, sp_kb=hw.sp_kb)
+            elif cfg.fixed_hw is not None:
+                hw = cfg.fixed_hw
+            best.best_hw = hw
+        best.history.append((evals, best.best_edp))
+        return edp
+
+    for sp_i in range(cfg.n_start_points):
+        # ---- start-point generation with rejection (Sec. 5.3.1)
+        mappings = None
+        for _ in range(cfg.max_reject_tries):
+            hw0 = cfg.fixed_hw if cfg.fixed_hw is not None else random_hw(rng)
+            cand = cosa_map_workload(list(workload.layers), hw0)
+            edp0 = _oracle_edp(cand, workload, cfg)
+            evals += 1
+            if edp0 <= cfg.reject_factor * best_start_edp:
+                mappings = cand
+                best_start_edp = min(best_start_edp, edp0)
+                break
+        if mappings is None:
+            mappings = cand
+        best.start_edps.append(edp0)
+        record(mappings)
+
+        theta = jnp.asarray(theta_from_mappings(mappings), dtype=jnp.float32)
+        orders = jnp.asarray(np.stack([m.order for m in mappings]))
+        m_t = jnp.zeros_like(theta)
+        v_t = jnp.zeros_like(theta)
+        t = 0
+
+        for step in range(1, cfg.steps + 1):
+            t += 1
+            val, grad = loss_grad(theta, orders)
+            theta, m_t, v_t = adam_step(theta, grad, m_t, v_t, float(t),
+                                        lr=cfg.lr)
+            evals += 1
+            if step % cfg.round_every == 0 or step == cfg.steps:
+                f_cont = np.asarray(build_f(theta, dims_j))
+                pe_cap = (cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
+                          else MAX_PE_DIM)
+                rounded = round_all(f_cont, np.asarray(orders), dims,
+                                    pe_cap=pe_cap)
+                if cfg.ordering_mode in ("iterative", "softmax"):
+                    fs_r, _ = stack_mappings(rounded)
+                    if cfg.fixed_hw is not None and not cfg.fix_pe_only:
+                        hwp = HWParams(
+                            c_pe=jnp.asarray(float(cfg.fixed_hw.c_pe)),
+                            acc_words=jnp.asarray(float(cfg.fixed_hw.acc_words)),
+                            sp_words=jnp.asarray(float(cfg.fixed_hw.sp_words)))
+                    else:
+                        hwp = infer_hw(jnp.asarray(fs_r),
+                                       jnp.asarray(strides))
+                    new_orders = select_orderings(fs_r, strides, repeats,
+                                                  hwp)
+                    for mp, o in zip(rounded, new_orders):
+                        mp.order = o
+                    orders = jnp.asarray(new_orders)
+                record(rounded)
+                # Continue GD from the rounded point, fresh momentum.
+                theta = jnp.asarray(theta_from_mappings(rounded),
+                                    dtype=jnp.float32)
+                m_t = jnp.zeros_like(theta)
+                v_t = jnp.zeros_like(theta)
+                t = 0
+
+    best.n_evals = evals
+    return best

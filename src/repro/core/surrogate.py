@@ -1,0 +1,168 @@
+"""Learned latency models (paper Sec. 4.7 / 6.5).
+
+Two small MLPs in pure JAX, architecture after Mind Mappings [9] as the
+paper describes — 7 hidden fully-connected layers, ~5.7k parameters:
+
+* **residual model** — predicts log(latency_RTL / latency_analytical),
+  composing with the analytical model ("DNN-augmented analytical");
+* **direct model** — predicts log(latency_RTL) from the same features
+  ("DNN-only").
+
+Features per sample: log problem dims (7), log tiling factors at the
+free sites (23), loop-ordering one-hots (9), log hardware parameters
+(3) = 42 inputs.  Both models train with Adam + MSE on a small dataset
+of random mappings (the paper uses 1567 FireSim measurements).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arch import GemminiHW
+from .mapping import Mapping
+from .oracle import evaluate
+from .problem import Layer
+from .search import FREE_MASK
+
+N_HIDDEN_LAYERS = 7
+HIDDEN = 28          # 7x28 hidden -> 5,937 params (paper: 5,737)
+RESIDUAL_CLIP = 2.0  # |log-ratio| bound: "outputs are constrained using
+#                      the analytical model prediction" (Sec. 6.5.3)
+DIRECT_CLIP = 40.0   # sanity bound on log-latency for the DNN-only model
+
+
+def featurize(m: Mapping, layer: Layer, hw: GemminiHW) -> np.ndarray:
+    dims = np.log(np.asarray(layer.dims, dtype=float))
+    factors = np.log(np.maximum(m.f[FREE_MASK], 1.0))
+    orders = np.zeros((3, 3))
+    for i, lvl in enumerate((1, 2, 3)):
+        orders[i, int(m.order[lvl])] = 1.0
+    hwf = np.log(np.array([hw.pe_dim, hw.acc_kb, hw.sp_kb], dtype=float))
+    return np.concatenate([dims, factors, orders.ravel(), hwf])
+
+
+N_FEATURES = 7 + int(FREE_MASK.sum()) + 9 + 3
+
+
+def init_mlp(key, n_in: int = N_FEATURES, hidden: int = HIDDEN,
+             n_hidden: int = N_HIDDEN_LAYERS):
+    sizes = [n_in] + [hidden] * n_hidden + [1]
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, b)) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros(b)})
+    return params
+
+
+def mlp_apply(params, x):
+    h = x
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]
+
+
+def n_params(params) -> int:
+    return sum(int(np.prod(p["w"].shape)) + int(p["b"].shape[0])
+               for p in params)
+
+
+@dataclasses.dataclass
+class TrainedModel:
+    params: list
+    x_mean: np.ndarray
+    x_std: np.ndarray
+    kind: str            # "residual" | "direct"
+
+    def predict_latency(self, feats: np.ndarray,
+                        analytical: np.ndarray) -> np.ndarray:
+        x = (feats - self.x_mean) / self.x_std
+        out = np.asarray(mlp_apply(self.params, jnp.asarray(x)))
+        if self.kind == "residual":
+            return analytical * np.exp(np.clip(out, -RESIDUAL_CLIP,
+                                               RESIDUAL_CLIP))
+        return np.exp(np.clip(out, 0.0, DIRECT_CLIP))
+
+
+def _fit(x: np.ndarray, y: np.ndarray, kind: str, epochs: int, lr: float,
+         seed: int, weight_decay: float = 3e-4, batch_size: int = 128,
+         val_frac: float = 0.15) -> TrainedModel:
+    """Minibatch Adam + L2, early-stopped on a held-out validation split
+    (keeps the best-validation parameters seen)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x))
+    n_val = max(int(len(x) * val_frac), 1)
+    vi, ti = perm[:n_val], perm[n_val:]
+
+    x_mean, x_std = x[ti].mean(0), x[ti].std(0) + 1e-8
+    xn = jnp.asarray((x - x_mean) / x_std, dtype=jnp.float32)
+    yn = jnp.asarray(y, dtype=jnp.float32)
+    xv, yv = xn[vi], yn[vi]
+    params = init_mlp(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        mse = jnp.mean((mlp_apply(p, xb) - yb) ** 2)
+        l2 = sum(jnp.sum(q["w"] ** 2) for q in p)
+        return mse + weight_decay * l2
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        g = jax.grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        def upd(pp, mm, vv):
+            mh = mm / (1 - 0.9 ** t)
+            vh = vv / (1 - 0.999 ** t)
+            return pp - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return jax.tree.map(upd, p, m, v), m, v
+
+    @jax.jit
+    def val_mse(p):
+        return jnp.mean((mlp_apply(p, xv) - yv) ** 2)
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    best_val, best_params, t = np.inf, params, 0
+    n_batches = max(len(ti) // batch_size, 1)
+    for epoch in range(epochs):
+        order = rng.permutation(len(ti))
+        for b in range(n_batches):
+            t += 1
+            sl = jnp.asarray(ti[order[b * batch_size:(b + 1) * batch_size]])
+            params, m, v = step(params, m, v, float(t), xn[sl], yn[sl])
+        if epoch % 5 == 0 or epoch == epochs - 1:
+            vm = float(val_mse(params))
+            if vm < best_val:
+                best_val, best_params = vm, jax.tree.map(lambda a: a,
+                                                         params)
+    return TrainedModel(params=best_params, x_mean=x_mean, x_std=x_std,
+                        kind=kind)
+
+
+def train_residual_model(feats: np.ndarray, analytical: np.ndarray,
+                         rtl: np.ndarray, epochs: int = 400,
+                         lr: float = 1e-3, seed: int = 0) -> TrainedModel:
+    y = np.log(rtl / analytical)
+    return _fit(feats, y, "residual", epochs, lr, seed)
+
+
+def train_direct_model(feats: np.ndarray, rtl: np.ndarray,
+                       epochs: int = 400, lr: float = 1e-3,
+                       seed: int = 0) -> TrainedModel:
+    return _fit(feats, np.log(rtl), "direct", epochs, lr, seed)
+
+
+def spearman(a: np.ndarray, b: np.ndarray) -> float:
+    """Spearman rank correlation (paper's Fig. 10/11 metric)."""
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / denom) if denom > 0 else 0.0

@@ -1,0 +1,123 @@
+"""DOSA's differentiable model retargeted at the TPU v5e memory
+hierarchy (DESIGN.md Sec. 5 — the hardware adaptation).
+
+Gemmini's hierarchy (regs <- accumulator/scratchpad <- DRAM, all sizes
+*searched*) becomes HBM -> VMEM -> VREG/MXU with *fixed* capacities:
+the paper's mapping-first capacity inference (Eqs. 2-5) inverts into a
+differentiable feasibility constraint (tile footprint <= VMEM), and the
+roofline latency (Eq. 12) gains a collective term for ICI:
+
+    latency = max(compute, hbm, ici)
+
+For a matmul (M, N, K) tiled (bm, bn, bk) with the K-innermost
+output-stationary schedule of `kernels/matmul`:
+
+    HBM bytes  = MK * ceil(N/bn)        (X re-read per N tile)
+               + KN * ceil(M/bm)        (Y re-read per M tile)
+               + 2 * MN                 (O write + downstream read)
+    compute    = 2MNK / (peak * mxu_utilization(bm, bn, bk))
+
+`mxu_utilization` models the 128x128 systolic array and (8, 128)
+tiling: fractional occupancy of the last-two-dims tiles — DOSA's
+"spatial factor" term with the spatial sizes frozen by silicon.
+Everything is smooth in log-block-space except the ceil terms, which we
+relax with a smooth-ceil (the same trick as the paper's factor>1 mask:
+exact forward, piecewise gradient).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .arch import TPU_V5E, TPUTarget
+
+
+def smooth_ceil(x):
+    """ceil with pass-through gradient of identity (ceil(x) >= x)."""
+    return x + jax.lax.stop_gradient(jnp.ceil(x) - x)
+
+
+def mxu_utilization(bm, bn, bk, target: TPUTarget = TPU_V5E):
+    """Fractional MXU occupancy of a (bm, bk) x (bk, bn) tile: last dim
+    packs into 128 lanes, second-to-last into 8 sublanes; the MXU
+    contracts 128 at a time."""
+    lane = target.mxu_dim
+    util_n = bn / (smooth_ceil(bn / lane) * lane)
+    util_k = bk / (smooth_ceil(bk / lane) * lane)
+    util_m = bm / (smooth_ceil(bm / 8.0) * 8.0)
+    return util_m * util_n * util_k
+
+
+def matmul_latency(m, n, k, bm, bn, bk, dtype_bytes: float = 2.0,
+                   target: TPUTarget = TPU_V5E):
+    """Differentiable latency (seconds) + aux terms for one matmul tile
+    schedule on one chip."""
+    grid_m = smooth_ceil(m / bm)
+    grid_n = smooth_ceil(n / bn)
+    hbm_bytes = (m * k * grid_n + k * n * grid_m) * dtype_bytes \
+        + 2.0 * m * n * dtype_bytes
+    compute_s = 2.0 * m * n * k / (
+        target.peak_flops * mxu_utilization(bm, bn, bk, target))
+    memory_s = hbm_bytes / target.hbm_bw
+    latency = jnp.maximum(compute_s, memory_s)
+    return latency, {"compute_s": compute_s, "memory_s": memory_s,
+                     "hbm_bytes": hbm_bytes}
+
+
+def vmem_footprint(bm, bn, bk, dtype_bytes: float = 2.0):
+    """Double-buffered input tiles + f32 accumulator (bytes)."""
+    return (2.0 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4.0)
+
+
+def vmem_penalty(bm, bn, bk, dtype_bytes: float = 2.0,
+                 target: TPUTarget = TPU_V5E):
+    """Relative VMEM overflow — the inverted Eq. 2-5 constraint."""
+    return jnp.maximum(
+        vmem_footprint(bm, bn, bk, dtype_bytes) / target.vmem_bytes
+        - 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Step-level three-term roofline (Sec. Roofline of EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def step_roofline(flops_per_dev: float, bytes_per_dev: float,
+                  coll_bytes_per_dev: float,
+                  target: TPUTarget = TPU_V5E) -> RooflineTerms:
+    """Three roofline terms from the dry-run's per-device HLO stats.
+
+      compute    = HLO_FLOPs / peak
+      memory     = HLO_bytes / HBM_bw
+      collective = collective_bytes / link_bw
+    """
+    return RooflineTerms(
+        compute_s=flops_per_dev / target.peak_flops,
+        memory_s=bytes_per_dev / target.hbm_bw,
+        collective_s=coll_bytes_per_dev / target.ici_bw,
+    )
+
+
+def model_flops(n_active_params: float, tokens: float,
+                train: bool) -> float:
+    """6*N*D (train) / 2*N*D (inference) useful-FLOPs accounting."""
+    per_tok = 6.0 * n_active_params if train else 2.0 * n_active_params
+    return per_tok * tokens

@@ -1,0 +1,26 @@
+"""Jit'd wrapper with GQA head handling + interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        bq: int = 512, bkv: int = 512,
+                        interpret: bool | None = None):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    out = flash_attention(
+        q.reshape(b * hq, s, d), k.reshape(b * hq, s, d),
+        v.reshape(b * hq, s, d), causal=causal, bq=bq, bkv=bkv,
+        interpret=interpret)
+    return out.reshape(b, hq, s, d)

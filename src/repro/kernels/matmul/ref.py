@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the tiled matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("JAX_COMPILATION_CACHE_DIR",
+                      "/tmp/repro_jax_cache")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "4")
+
+# --- everything below may import jax ---------------------------------------
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input-shape) cell on the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — and
+records memory / cost / collective analyses for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k \
+      [--multi-pod] [--out artifacts/dryrun]
+  python -m repro.launch.dryrun --all [--multi-pod] [--subprocess]
+
+`--subprocess` isolates each cell in its own process (compile memory is
+returned to the OS between cells); results are merged into
+<out>/dryrun_<mesh>.json either way.
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+
+def _merge(out_dir: pathlib.Path, mesh_name: str, record: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"dryrun_{mesh_name}.json"
+    data = {}
+    if path.exists():
+        data = json.loads(path.read_text())
+    data[f"{record['arch']}|{record['shape']}"] = record
+    path.write_text(json.dumps(data, indent=1, default=float))
+    return path
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path):
+    from repro.launch.cells import run_cell
+    res = run_cell(arch, shape, multi_pod)
+    rec = res.to_json()
+    mesh_name = rec["mesh"]
+    _merge(out_dir, mesh_name, rec)
+    status = ("OK" if res.ok else
+              ("SKIP: " + res.skip_reason if res.skip_reason else
+               "FAIL: " + res.error[:200]))
+    print(f"[dryrun] {arch:22s} {shape:12s} {mesh_name:8s} {status}")
+    if res.ok:
+        print(f"         flops/dev={res.flops:.3e} "
+              f"bytes/dev={res.bytes_accessed:.3e} "
+              f"coll/dev={res.collectives['total']:.3e}B "
+              f"(lower {res.lower_s:.0f}s compile {res.compile_s:.0f}s)")
+    return res.ok or bool(res.skip_reason)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--subprocess", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        from repro.configs.base import SHAPES
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    if args.subprocess:
+                        cmd = [sys.executable, "-m",
+                               "repro.launch.dryrun", "--arch", arch,
+                               "--shape", shape, "--out", str(out_dir)]
+                        if mp:
+                            cmd.append("--multi-pod")
+                        r = subprocess.run(cmd)
+                        if r.returncode != 0:
+                            failures.append((arch, shape, mp))
+                    else:
+                        try:
+                            ok = run_one(arch, shape, mp, out_dir)
+                            if not ok:
+                                failures.append((arch, shape, mp))
+                        except Exception as e:  # noqa: BLE001
+                            print(f"[dryrun] {arch} {shape} EXC: {e}")
+                            failures.append((arch, shape, mp))
+        if failures:
+            sys.exit(f"dry-run failures: {failures}")
+        print("[dryrun] all cells passed")
+        return
+
+    ok = run_one(args.arch, args.shape, args.multi_pod, out_dir)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

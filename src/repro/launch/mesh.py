@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16)      axes ("data", "model")   = 256 chips
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over however many (host) devices exist — used by the
+    multi-device subprocess tests."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((1, n // model, model),
+                         ("pod", "data", "model"), axis_types=_auto(3))

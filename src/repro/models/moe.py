@@ -1,0 +1,117 @@
+"""Expert-parallel Mixture-of-Experts (dropping, capacity-bounded).
+
+Gather/scatter formulation — O(T*k) memory, no (T, E, C) one-hot
+dispatch tensor (which is quadratic in group size and infeasible at
+E=384 / 1M tokens):
+
+  1. router top-k per token (f32 logits);
+  2. tokens are ranked within their expert via a stable sort of the
+     flat (token, slot) assignment; rank >= capacity is dropped
+     (capacity = tokens*k/E * capacity_factor, *per group* — groups are
+     the (pod, data)-sharded leading dim, so dispatch is shard-local);
+  3. gather (E, C, D) expert inputs (E sharded over "model" => each
+     model shard gathers only its experts — expert parallelism);
+  4. batched expert GEMMs (E sharded);
+  5. scatter-add back with router weights; cross-model partial sums are
+     combined by the out-sharding constraint (an all-reduce over
+     "model", the same volume as a TP FFN).
+
+Auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import spec
+from .layers import _activate, dense_init, dtype_of
+
+
+def moe_init(key, cfg: ArchConfig):
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    params = {
+        "router": dense_init(ks[0], (d, e), pdt),
+        "w_up": dense_init(ks[1], (e, d, f), pdt),
+        "w_down": dense_init(ks[2], (e, f, d), pdt,
+                             scale=1.0 / np.sqrt(f * 2 * cfg.n_layers)),
+    }
+    specs = {
+        "router": spec("embed", None),
+        "w_up": spec("experts", "embed", "expert_mlp"),
+        "w_down": spec("experts", "expert_mlp", "embed"),
+    }
+    if gated:
+        params["w_gate"] = dense_init(ks[3], (e, d, f), pdt)
+        specs["w_gate"] = spec("experts", "embed", "expert_mlp")
+    return params, specs
+
+
+def _capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.experts_per_token / cfg.n_experts
+            * cfg.capacity_factor)
+    return max(c, 1)
+
+
+def moe_apply(params, cfg: ArchConfig, x):
+    """x: (G, T, D) — G is the (pod, data)-sharded group dim (we use
+    G = batch).  Returns (out, aux_loss)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    g, t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = _capacity(cfg, t)
+
+    logits = (x @ params["router"].astype(cdt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,T,E)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                   # (G,T,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: mean prob x mean assignment fraction per expert.
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jnp.zeros((e,)).at[gate_i.reshape(-1)].add(
+        1.0 / (g * t * k))
+    aux = e * jnp.sum(me * ce)
+
+    def dispatch_one(xg, idx, w):
+        """xg: (T,D); idx/w: (T,k) -> (out (T,D))."""
+        flat_e = idx.reshape(-1)                               # (T*k,)
+        flat_tok = jnp.repeat(jnp.arange(t), k)
+        flat_w = w.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        sorted_tok = flat_tok[order]
+        sorted_w = flat_w[order]
+        # rank within expert
+        counts = jnp.bincount(flat_e, length=e)
+        offsets = jnp.cumsum(counts) - counts                  # (E,)
+        pos = jnp.arange(t * k) - offsets[sorted_e]
+        # overflow positions land out of bounds => dropped by mode="drop"
+        pos_c = jnp.where(pos < cap, pos, cap)
+        # gather indices (E, C): init to T (padding row)
+        idx_ec = jnp.full((e, cap), t, dtype=jnp.int32)
+        idx_ec = idx_ec.at[sorted_e, pos_c].set(
+            sorted_tok.astype(jnp.int32), mode="drop")
+        w_ec = jnp.zeros((e, cap), dtype=jnp.float32)
+        w_ec = w_ec.at[sorted_e, pos_c].set(sorted_w, mode="drop")
+
+        x_pad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], 0)
+        x_ec = x_pad[idx_ec]                                   # (E,C,D)
+        u = jnp.einsum("ecd,edf->ecf", x_ec,
+                       params["w_up"].astype(cdt))
+        gt = (jnp.einsum("ecd,edf->ecf", x_ec,
+                         params["w_gate"].astype(cdt))
+              if "w_gate" in params else None)
+        h = _activate(cfg.activation, u, gt)
+        y_ec = jnp.einsum("ecf,efd->ecd", h,
+                          params["w_down"].astype(cdt))
+        y_ec = y_ec * w_ec[..., None].astype(cdt)
+        out = jnp.zeros((t + 1, d), cdt).at[idx_ec.reshape(-1)].add(
+            y_ec.reshape(-1, d))
+        return out[:t]
+
+    out = jax.vmap(dispatch_one)(x, gate_i, gate_w)
+    return out.astype(cdt), aux

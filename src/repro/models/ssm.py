@@ -1,0 +1,149 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm in pure JAX:
+  * intra-chunk: masked attention-like GEMMs (C B^T (.) L) X,
+  * chunk states: (B (.) decay)^T X,
+  * inter-chunk: associative scan over chunk states,
+  * output: C h + D-skip.
+
+Decode path is the exact recurrence h <- a h + dt B x^T, y = C h.
+Sub-quadratic in sequence length => used for the long_500k shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..sharding.rules import spec
+from .layers import dense_init, dtype_of, rmsnorm_init, rmsnorm
+
+
+def ssm_init(key, cfg: ArchConfig):
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    params = {
+        # in_proj -> [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * ds + nh), pdt),
+        "w_out": dense_init(ks[1], (di, d), pdt,
+                            scale=1.0 / np.sqrt(di * 2 * cfg.n_layers)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+    }
+    norm_p, norm_s = rmsnorm_init(cfg, di)
+    params["norm"] = norm_p
+    specs = {
+        "w_in": spec("embed", "ssm_inner"),
+        "w_out": spec("ssm_inner", "embed"),
+        "a_log": spec("ssm_heads"),
+        "dt_bias": spec("ssm_heads"),
+        "d_skip": spec("ssm_heads"),
+        "norm": norm_s,
+    }
+    return params, specs
+
+
+def _project(params, cfg: ArchConfig, x):
+    cdt = dtype_of(cfg.compute_dtype)
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["w_in"].astype(cdt)
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + ds]
+    c = zxbcdt[..., 2 * di + ds:2 * di + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ds:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])        # (B,S,nh)
+    return z, xs, b, c, dt
+
+
+def _segsum(a):
+    """Stable segment-sum: out[i, j] = sum_{j < l <= i} a[l] for j < i."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_forward(params, cfg: ArchConfig, x, unroll: bool = False):
+    """Chunked SSD. x: (B, S, D) -> (B, S, D)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    bsz, s, _ = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ck = min(cfg.ssm_chunk, s)
+    nc = s // ck
+    assert nc * ck == s, f"seq {s} not divisible by chunk {ck}"
+
+    z, xs, b, c, dt = _project(params, cfg, x)
+    xh = xs.reshape(bsz, nc, ck, nh, hd).astype(jnp.float32)
+    bm = b.reshape(bsz, nc, ck, ds).astype(jnp.float32)
+    cm = c.reshape(bsz, nc, ck, ds).astype(jnp.float32)
+    dtm = dt.reshape(bsz, nc, ck, nh)
+    a = -jnp.exp(params["a_log"])                    # (nh,)
+    da = dtm * a                                      # (B,nc,ck,nh)
+
+    # ---- intra-chunk (quadratic within the chunk only)
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))       # (B,nc,nh,ck,ck)
+    scores = jnp.einsum("bnid,bnjd->bnij", cm, bm)          # (B,nc,ck,ck)
+    y_intra = jnp.einsum("bnhij,bnij,bnjh,bnjhp->bnihp",
+                         lmat, scores, dtm, xh)
+
+    # ---- chunk states: S_n = sum_j decay_to_end[j] dt[j] B[j] x[j]^T
+    decay_end = jnp.exp(jnp.cumsum(da, axis=2)[:, :, -1:, :]
+                        - jnp.cumsum(da, axis=2))           # (B,nc,ck,nh)
+    states = jnp.einsum("bnjh,bnjd,bnjhp->bnhdp",
+                        decay_end * dtm, bm, xh)            # (B,nc,nh,ds,hd)
+
+    # ---- inter-chunk scan: h_n = h_{n-1} * exp(sum da_n) + S_n
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        dec, st = inp
+        h = h * dec[:, :, None, None] + st
+        return h, h
+
+    h0 = jnp.zeros((bsz, nh, ds, hd), jnp.float32)
+    _, hs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+        unroll=unroll)
+    hs = jnp.moveaxis(hs, 0, 1)                             # (B,nc,nh,ds,hd)
+    # state entering chunk n is h_{n-1}
+    h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+
+    decay_in = jnp.exp(jnp.cumsum(da, axis=2))              # (B,nc,ck,nh)
+    y_inter = jnp.einsum("bnid,bnih,bnhdp->bnihp",
+                         cm, decay_in, h_prev)
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hd)
+    y = y + xs.reshape(bsz, s, nh, hd).astype(jnp.float32) \
+        * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner).astype(cdt)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"].astype(cdt)
+
+
+def ssd_decode(params, cfg: ArchConfig, x, h):
+    """Single-step recurrence.  x: (B, 1, D); h: (B, nh, ds, hd).
+    Returns (y (B,1,D), new_h)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    bsz = x.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, b, c, dt = _project(params, cfg, x)
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32)
+    bv = b.reshape(bsz, ds).astype(jnp.float32)
+    cv = c.reshape(bsz, ds).astype(jnp.float32)
+    dtv = dt.reshape(bsz, nh)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dtv * a)                                # (B,nh)
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bd,bhp->bhdp", dtv, bv, xh)
+    y = jnp.einsum("bd,bhdp->bhp", cv, h)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(cdt)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"].astype(cdt), h

@@ -1,0 +1,118 @@
+"""Fault-tolerant training driver.
+
+Design points for 1000+-node operation (exercised at laptop scale by
+tests/test_fault_tolerance.py):
+
+* **checkpoint/restart** — atomic checkpoints every `ckpt_every` steps
+  (repro.checkpoint); on (re)start the driver resumes from LATEST.
+  The data pipeline is stateless-by-step, so resume is bit-exact.
+* **failure containment** — a step that raises (device OOM, preempted
+  host, injected fault) triggers rollback-to-last-checkpoint rather
+  than process death; `max_restarts` bounds the retry budget.
+* **straggler mitigation** — per-step wall-time is tracked against a
+  rolling median; steps slower than `straggler_factor` x median are
+  logged with their step id (at scale: the signal feeds hot-spare
+  scheduling; the data cursor makes skip-and-redo safe).
+* **elastic rescale** — checkpoints are mesh-agnostic (logical arrays);
+  `restore` places them onto whatever mesh the relaunched job built
+  (checkpoint.py docstring; tested by reshard round-trip tests).
+* **gradient compression** — optional int8 round-trip on gradients
+  before the cross-pod (DCN) reduction (train_step.compress_grads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..data.pipeline import DataConfig, make_batch
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "checkpoints"
+    max_restarts: int = 3
+    straggler_factor: float = 2.0
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class DriverReport:
+    steps_run: int
+    restarts: int
+    straggler_steps: list
+    losses: list
+    resumed_from: int | None
+
+
+def train_with_recovery(train_step: Callable, params, opt_state,
+                        data_cfg: DataConfig, cfg: DriverConfig,
+                        fault_hook: Callable[[int], None] | None = None,
+                        log: Callable[[str], None] = print
+                        ) -> tuple[dict, dict, DriverReport]:
+    """Run `total_steps`, checkpointing and restarting on failure.
+    `fault_hook(step)` may raise to simulate node failure."""
+    ckpt_dir = Path(cfg.ckpt_dir)
+    restarts = 0
+    stragglers: list[int] = []
+    losses: list[float] = []
+    durations: list[float] = []
+
+    start = ckpt.latest_step(ckpt_dir)
+    resumed_from = start
+    if start is not None:
+        _, state = ckpt.restore(ckpt_dir)
+        params, opt_state = state["params"], state["opt"]
+        log(f"[driver] resumed from step {start}")
+    step = start or 0
+
+    while step < cfg.total_steps:
+        try:
+            if fault_hook is not None:
+                fault_hook(step)
+            batch = make_batch(data_cfg, step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = train_step(params, opt_state,
+                                                    batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at {step}")
+            durations.append(dt)
+            losses.append(loss)
+            med = float(np.median(durations[-50:]))
+            if len(durations) > 5 and dt > cfg.straggler_factor * med:
+                stragglers.append(step)
+                log(f"[driver] straggler step {step}: {dt:.3f}s "
+                    f"(median {med:.3f}s)")
+            step += 1
+            if step % cfg.log_every == 0:
+                log(f"[driver] step {step} loss {loss:.4f} "
+                    f"({dt*1e3:.0f} ms)")
+            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                ckpt.save(ckpt_dir, step,
+                          {"params": params, "opt": opt_state})
+        except (FloatingPointError, RuntimeError) as e:
+            restarts += 1
+            log(f"[driver] step {step} failed ({e}); restart "
+                f"{restarts}/{cfg.max_restarts}")
+            if restarts > cfg.max_restarts:
+                raise
+            prev = ckpt.latest_step(ckpt_dir)
+            if prev is None:
+                step = 0
+            else:
+                _, state = ckpt.restore(ckpt_dir)
+                params, opt_state = state["params"], state["opt"]
+                step = prev
+    return params, opt_state, DriverReport(
+        steps_run=step, restarts=restarts, straggler_steps=stragglers,
+        losses=losses, resumed_from=resumed_from)

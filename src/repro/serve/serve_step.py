@@ -1,0 +1,55 @@
+"""Serving steps: prefill (build cache from a prompt) and decode (one
+token per call against the cache).
+
+The decode KV cache is sequence-sharded over "model" (context
+parallelism) and batch-sharded over ("pod", "data") — see
+`LM.cache_specs`.  `serve_step` is the unit the dry-run lowers for the
+decode_32k / long_500k shapes."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import LM
+
+
+def make_serve_step(model: LM):
+    """Returns decode_step(params, cache, tokens, position[, image])."""
+
+    def serve_step(params, cache, tokens, position, image_embeds=None):
+        logits, cache = model.decode_step(params, cache, tokens,
+                                          position,
+                                          image_embeds=image_embeds)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step
+
+
+def greedy_decode(model: LM, params, prompt_tokens, n_steps: int,
+                  max_seq: int | None = None, image_embeds=None):
+    """Host-loop greedy decoding for the examples / tests: prefill the
+    prompt, then `n_steps` decode steps."""
+    b, s = prompt_tokens.shape
+    max_seq = max_seq or (s + n_steps)
+    cache = model.init_cache(b, max_seq)
+    step = jax.jit(make_serve_step(model))
+
+    # prefill by stepping through the prompt (small-scale path; the
+    # production prefill kernel is `model.prefill`)
+    tok = prompt_tokens[:, :1]
+    out = [tok]
+    for pos in range(max_seq - 1):
+        if pos + 1 < s:
+            nxt, cache = step(params, cache, tok, jnp.int32(pos),
+                              image_embeds)
+            tok = prompt_tokens[:, pos + 1:pos + 2]
+        else:
+            tok, cache = step(params, cache, tok, jnp.int32(pos),
+                              image_embeds)
+        out.append(tok)
+        if pos + 1 >= s + n_steps - 1:
+            break
+    return jnp.concatenate(out, axis=1)

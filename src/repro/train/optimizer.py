@@ -1,0 +1,146 @@
+"""Optimizers in pure JAX: AdamW and Adafactor (factored second moment
+for the 340B/1T-class configs whose full Adam state cannot fit HBM).
+
+State is a pytree congruent with params, so it inherits the parameter
+PartitionSpecs (ZeRO: optimizer state is sharded exactly like its
+parameter across "data" x "model")."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adam"            # adam | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    moment_dtype: str = "float32"
+
+
+def _mdt(cfg: OptConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.moment_dtype]
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adam_init(cfg: OptConfig, params):
+    mdt = _mdt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+        v = (b2 * v.astype(jnp.float32) + (1 - b2) * g * g)
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m.astype(state_dtype), v.astype(state_dtype)
+
+    state_dtype = _mdt(cfg)
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored v, no first moment.
+# ---------------------------------------------------------------------------
+
+def adafactor_init(cfg: OptConfig, params):
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(factored, params,
+                              is_leaf=lambda p: hasattr(p, "ndim")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., :, None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1, keepdims=True)
+                                   [..., None], 1e-30))
+            update = g * jax.lax.rsqrt(denom + 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g2
+            update = g * jax.lax.rsqrt(vv + 1e-30)
+            new_v = {"v": vv}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) - lr * update
+                 - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    new = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = tdef.unflatten([n[0] for n in new])
+    new_v = tdef.unflatten([n[1] for n in new])
+    return new_p, {"v": new_v, "step": step}
+
+
+def make_optimizer(name: str, cfg: OptConfig):
+    if name == "adam":
+        return adam_init, adam_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise KeyError(name)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm

@@ -1,0 +1,32 @@
+"""End-to-end CLI smoke tests for the launchers (subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    return subprocess.run([sys.executable, "-m"] + args,
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_cli_reduced(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "qwen3_0_6b", "--reduced",
+              "--steps", "6", "--batch", "2", "--seq", "64",
+              "--ckpt-every", "3", "--ckpt-dir", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done: 6 steps" in r.stdout
+    assert (tmp_path / "LATEST").exists()
+
+
+@pytest.mark.slow
+def test_serve_cli_reduced():
+    r = _run(["repro.launch.serve", "--arch", "qwen3_0_6b", "--reduced",
+              "--batch", "2", "--prompt-len", "4", "--gen", "6"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout

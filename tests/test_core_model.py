@@ -1,0 +1,191 @@
+"""Unit + property tests for the DOSA differentiable model vs the
+independent iterative oracle (the paper's Fig. 4 agreement, as a test
+suite)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model, oracle
+from repro.core.arch import ACC, DRAM, REG, SP, GemminiHW
+from repro.core.mapping import (SPATIAL, TEMPORAL, Mapping, random_mapping)
+from repro.core.problem import (C, K, N, P, Q, R, S, Layer, Workload,
+                                divisors)
+
+# ---------------------------------------------------------------------------
+# The paper's Fig. 3 worked example — exact numbers from the figure.
+# ---------------------------------------------------------------------------
+
+def _fig3():
+    layer = Layer(dims=(1, 1, 56, 56, 64, 64, 1), name="fig3")
+    f = np.ones((2, 4, 7))
+    f[TEMPORAL, DRAM, P] = 56      # for p3 in [0:56)
+    f[TEMPORAL, DRAM, Q] = 4       # for q3 in [0:4)
+    f[SPATIAL, SP, K] = 64         # spatial_for k2 in [0:64)
+    f[SPATIAL, ACC, C] = 64        # spatial_for c1 in [0:64)
+    f[TEMPORAL, REG, Q] = 14       # for q0 in [0:14)
+    return layer, Mapping(f=f, order=np.zeros(4, dtype=np.int64))
+
+
+def test_fig3_capacities_match_paper():
+    layer, m = _fig3()
+    caps = np.asarray(model.capacities(jnp.asarray(m.f), jnp.asarray([1., 1.])))
+    # Fig. 3: Registers (Weights: 4096); Accumulator (Outputs: 896);
+    # Scratchpad (Weights: 4096, Inputs: 896);
+    # DRAM (Weights: 4096, Inputs: 200704, Outputs: 200704).
+    assert caps[REG, 0] == 4096
+    assert caps[ACC, 2] == 896
+    assert caps[SP, 0] == 4096 and caps[SP, 1] == 896
+    assert tuple(caps[DRAM]) == (4096, 200704, 200704)
+
+
+def test_fig3_min_hw_is_5kb_scratchpad():
+    layer, m = _fig3()
+    from repro.core.hw_infer import minimal_hw
+    hw = minimal_hw([m], [layer])
+    # Fig. 3: per-layer min scratchpad = (4096 + 896) words * 1B ~ 5 KB.
+    assert hw.sp_kb == 5.0
+    assert hw.pe_dim == 64
+
+
+def test_fig3_model_oracle_agree():
+    layer, m = _fig3()
+    r = oracle.evaluate(m, layer, quantize_dram=False)
+    assert r.valid
+    hw = model.infer_hw(jnp.asarray(m.f)[None], jnp.asarray([[1., 1.]]))
+    lm = model.layer_metrics(jnp.asarray(m.f), jnp.asarray(m.order),
+                             jnp.asarray([1., 1.]), hw.c_pe, hw.acc_words,
+                             hw.sp_words)
+    np.testing.assert_allclose(float(lm.latency), r.latency, rtol=1e-5)
+    np.testing.assert_allclose(float(lm.energy), r.energy, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(lm.accesses), r.accesses, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: closed-form model == iterative oracle on random valid
+# mappings (all orderings, strided convs, matmuls).
+# ---------------------------------------------------------------------------
+
+_dim_vals = st.sampled_from([1, 2, 3, 4, 7, 8, 12, 14, 16, 32, 56, 64, 96,
+                             128, 224, 256])
+
+
+@st.composite
+def layer_and_mapping(draw):
+    dims = tuple(draw(_dim_vals) for _ in range(7))
+    stride = draw(st.sampled_from([1, 2]))
+    layer = Layer(dims=dims, wstride=stride, hstride=stride)
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    m = random_mapping(np.asarray(dims), np.random.default_rng(seed))
+    m.order = np.asarray(
+        [0, draw(st.integers(0, 2)), draw(st.integers(0, 2)),
+         draw(st.integers(0, 2))], dtype=np.int64)
+    return layer, m
+
+
+@hypothesis.settings(max_examples=120, deadline=None)
+@hypothesis.given(layer_and_mapping())
+def test_model_matches_oracle(lm_pair):
+    layer, m = lm_pair
+    r = oracle.evaluate(m, layer, quantize_dram=False)
+    if not r.valid:       # PE cap can reject a random spatial pick
+        return
+    hw = model.infer_hw(jnp.asarray(m.f)[None],
+                        jnp.asarray([[float(layer.wstride),
+                                      float(layer.hstride)]]))
+    lm = model.layer_metrics(
+        jnp.asarray(m.f), jnp.asarray(m.order),
+        jnp.asarray([float(layer.wstride), float(layer.hstride)]),
+        hw.c_pe, hw.acc_words, hw.sp_words)
+    np.testing.assert_allclose(float(lm.latency), r.latency, rtol=1e-4)
+    np.testing.assert_allclose(float(lm.energy), r.energy, rtol=1e-4)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(layer_and_mapping())
+def test_traffic_invariants(lm_pair):
+    """Physical invariants: traffic non-negative; DRAM reads of W and I
+    at least the tensor size (every word must arrive at least once);
+    MACs equal the dim product."""
+    layer, m = lm_pair
+    r = oracle.evaluate(m, layer, quantize_dram=False)
+    if not r.valid:
+        return
+    assert np.all(r.accesses >= 0)
+    w_size, i_size, o_size = layer.tensor_sizes()
+    # DRAM total accesses cover each tensor at least once.
+    assert r.accesses[DRAM] >= w_size + i_size + o_size - 1e-6
+    assert r.caps[DRAM, 0] == w_size
+    assert r.caps[DRAM, 2] == o_size
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(layer_and_mapping())
+def test_capacity_monotone_in_levels(lm_pair):
+    """Tiles can only grow toward DRAM."""
+    layer, m = lm_pair
+    caps = np.asarray(model.capacities(
+        jnp.asarray(m.f),
+        jnp.asarray([float(layer.wstride), float(layer.hstride)])))
+    assert np.all(np.diff(caps, axis=0) >= -1e-6)
+
+
+def test_gradients_flow_and_finite(tiny_workload):
+    """EDP is differentiable w.r.t. factors: finite, mostly nonzero."""
+    from repro.core.search import build_f, make_loss, SearchConfig, \
+        theta_from_mappings
+    from repro.core.cosa import cosa_map_workload
+    from repro.core.arch import GEMMINI_DEFAULT
+    maps = cosa_map_workload(list(tiny_workload.layers), GEMMINI_DEFAULT)
+    loss_grad, *_ = make_loss(tiny_workload, SearchConfig())
+    theta = jnp.asarray(theta_from_mappings(maps), dtype=jnp.float32)
+    orders = jnp.asarray(np.stack([m.order for m in maps]))
+    val, grad = loss_grad(theta, orders)
+    assert np.isfinite(float(val))
+    g = np.asarray(grad)
+    assert np.all(np.isfinite(g))
+    assert (np.abs(g) > 0).mean() > 0.2
+
+
+def test_dram_quantization_diverges_small_layers_only():
+    """The oracle's DRAM ceil-quantization (the paper's Fig. 4 outlier
+    mechanism) matters for tiny layers, vanishes for big ones."""
+    small = Layer(dims=(1, 1, 2, 1, 3, 2, 1))
+    big = Layer(dims=(3, 3, 56, 56, 64, 64, 4))
+    for layer, bound in ((small, 0.01), (big, 1e-3)):
+        m = random_mapping(np.asarray(layer.dims),
+                           np.random.default_rng(0))
+        rq = oracle.evaluate(m, layer, quantize_dram=True)
+        r = oracle.evaluate(m, layer, quantize_dram=False)
+        rel = abs(rq.energy - r.energy) / r.energy
+        if layer is small:
+            assert rel >= 0.0   # may diverge
+        else:
+            assert rel < bound
+
+
+# ---------------------------------------------------------------------------
+# Energy model specifics (Table 2)
+# ---------------------------------------------------------------------------
+
+def test_epa_capacity_dependence():
+    from repro.core.arch import epa_per_level
+    small = epa_per_level(256.0, 8 * 1024 / 4, 32 * 1024)
+    big = epa_per_level(256.0, 512 * 1024 / 4, 2048 * 1024)
+    assert big[1] > small[1] and big[2] > small[2]     # SRAM EPA grows
+    assert big[0] == small[0] and big[3] == small[3]   # reg/DRAM constant
+
+
+def test_latency_roofline_compute_bound():
+    """A mapping with full PE utilization and tiny traffic must be
+    compute-bound."""
+    layer, m = _fig3()
+    hw = model.infer_hw(jnp.asarray(m.f)[None], jnp.asarray([[1., 1.]]))
+    lm = model.layer_metrics(jnp.asarray(m.f), jnp.asarray(m.order),
+                             jnp.asarray([1., 1.]), hw.c_pe, hw.acc_words,
+                             hw.sp_words)
+    assert float(lm.latency) >= float(lm.compute_latency)
+    assert float(lm.latency) == pytest.approx(
+        max(float(lm.compute_latency), float(np.max(lm.mem_latency))))

@@ -1,0 +1,79 @@
+"""Dry-run machinery tests.
+
+The full 40-cell x 2-mesh sweep is `python -m repro.launch.dryrun
+--all --both-meshes` (hours); here we prove the machinery end-to-end on
+one representative cell per mode in subprocesses (the 512-device
+XLA_FLAGS never touches this process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.cells import parse_collective_bytes
+
+
+def _run_cell(tmp_path, arch, shape, multi=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(tmp_path)]
+    if multi:
+        cmd.append("--multi-pod")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1500)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    mesh = "2x16x16" if multi else "16x16"
+    data = json.loads((tmp_path / f"dryrun_{mesh}.json").read_text())
+    return data[f"{arch}|{shape}"]
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_single_pod(tmp_path):
+    rec = _run_cell(tmp_path, "qwen3_0_6b", "train_4k")
+    assert rec["ok"]
+    assert rec["flops"] > 1e12                 # extrapolated per-device
+    assert rec["collectives"]["total"] > 1e9   # FSDP/TP traffic present
+    assert rec["collectives"]["all-to-all"] > 0  # Ulysses attention
+    assert rec["memory"]["argument_size_in_bytes"] < 100e6  # sharded
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_multi_pod(tmp_path):
+    rec = _run_cell(tmp_path, "qwen3_0_6b", "decode_32k", multi=True)
+    assert rec["ok"]
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_skip_rules_respected(tmp_path):
+    from repro.launch.cells import run_cell
+    rec = run_cell("gemma_7b", "long_500k", multi_pod=False)
+    assert not rec.ok and "sub-quadratic" in rec.skip_reason
+    rec = run_cell("hubert_xlarge", "decode_32k", multi_pod=False)
+    assert not rec.ok and "encoder-only" in rec.skip_reason
+
+
+def test_collective_parser():
+    hlo = """
+      %ar = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={}
+      %ag = bf16[16,1024] all-gather(bf16[16,512] %y), dimensions={1}
+      %a2a = f32[8,8] all-to-all(f32[8,8] %z), dimensions={0}
+      %cp = f32[4] collective-permute(f32[4] %w), source_target_pairs={}
+      %dot = f32[2,2] dot(f32[2,2] %a, f32[2,2] %b)
+    """
+    out = parse_collective_bytes(hlo)
+    assert out["n_ops"] == 4
+    assert out["all-reduce"] == 128 * 256 * 4 * 2.0
+    assert out["all-gather"] == 16 * 1024 * 2 * 1.0
+    assert out["all-to-all"] == 8 * 8 * 4
+    assert out["collective-permute"] == 4 * 4
+
+
+def test_input_specs_shapes():
+    from repro.launch.cells import input_specs
+    sp = input_specs("qwen3_0_6b", "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    sp = input_specs("qwen3_0_6b", "decode_32k")
+    assert sp["tokens"].shape == (128, 1)
+    assert "cache" in sp

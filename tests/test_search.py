@@ -1,0 +1,127 @@
+"""Tests for rounding, hardware inference, CoSA stand-in, GD search and
+black-box baselines."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.arch import GEMMINI_DEFAULT, MAX_PE_DIM, GemminiHW
+from repro.core.cosa import cosa_map, cosa_map_workload
+from repro.core.hw_infer import minimal_hw, random_hw
+from repro.core.mapping import SPATIAL, TEMPORAL, random_mapping
+from repro.core.oracle import evaluate, evaluate_workload
+from repro.core.problem import Layer, Workload, divisors
+from repro.core.rounding import round_mapping
+from repro.core.search import SearchConfig, dosa_search
+
+_dim_vals = st.sampled_from([1, 2, 3, 5, 8, 12, 14, 16, 56, 64, 100, 128,
+                             224, 1000])
+
+
+@hypothesis.settings(max_examples=80, deadline=None)
+@hypothesis.given(
+    dims=st.tuples(*[_dim_vals] * 7),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_rounding_always_valid(dims, seed):
+    """Property (Sec. 5.3.2): rounding any positive continuous factor
+    tensor yields an integer mapping whose per-dim products equal the
+    problem dims and whose spatial factors respect the PE cap."""
+    rng = np.random.default_rng(seed)
+    f = np.exp(rng.normal(0.0, 1.5, size=(2, 4, 7)))
+    m = round_mapping(f, np.zeros(4, dtype=np.int64), np.asarray(dims))
+    m.validate(np.asarray(dims))
+    assert np.allclose(m.f, np.round(m.f))
+    assert m.f[SPATIAL].max() <= MAX_PE_DIM
+    # every factor divides its dim
+    for d in range(7):
+        for k in range(2):
+            for lvl in range(4):
+                assert dims[d] % int(m.f[k, lvl, d]) == 0
+
+
+def test_rounding_respects_pe_cap_override():
+    dims = np.array([1, 1, 56, 56, 256, 256, 1])
+    f = np.ones((2, 4, 7))
+    f[SPATIAL, 1, 4] = 200.0   # C spatial wants 200
+    f[SPATIAL, 2, 5] = 200.0   # K spatial wants 200
+    m = round_mapping(f, np.zeros(4, dtype=np.int64), dims, pe_cap=16)
+    assert m.f[SPATIAL].max() <= 16
+
+
+def test_minimal_hw_max_over_layers(tiny_workload):
+    maps = cosa_map_workload(list(tiny_workload.layers), GEMMINI_DEFAULT)
+    hw = minimal_hw(maps, list(tiny_workload.layers))
+    # every layer must fit on the inferred hardware
+    for m, layer in zip(maps, tiny_workload.layers):
+        r = evaluate(m, layer, hw=hw)
+        assert r.valid, r.reason
+
+
+def test_cosa_fits_and_beats_trivial(tiny_workload):
+    """CoSA stand-in produces valid mappings within the hardware budget
+    that beat the identity (all-DRAM) mapping."""
+    from repro.core.mapping import identity_mapping
+    hw = GEMMINI_DEFAULT
+    for layer in tiny_workload.layers:
+        m = cosa_map(layer, hw)
+        r = evaluate(m, layer, hw=hw)
+        assert r.valid, r.reason
+        ident = identity_mapping(np.asarray(layer.dims))
+        r0 = evaluate(ident, layer, hw=hw)
+        assert r.edp < r0.edp
+
+
+def test_dosa_search_improves_over_start(tiny_workload):
+    cfg = SearchConfig(steps=300, round_every=150, n_start_points=2, seed=0)
+    res = dosa_search(tiny_workload, cfg)
+    assert np.isfinite(res.best_edp)
+    assert res.best_edp <= min(res.start_edps)
+    # the result's mappings re-evaluate to the reported EDP
+    edp, _ = evaluate_workload(res.best_mappings, tiny_workload.layers)
+    assert edp == pytest.approx(res.best_edp, rel=1e-6)
+    # history is monotone nonincreasing in best-so-far
+    bests = [b for _, b in res.history]
+    assert all(b2 <= b1 + 1e-9 for b1, b2 in zip(bests, bests[1:]))
+
+
+def test_dosa_search_fixed_hw_mode(tiny_workload):
+    """Sec. 6.5 protocol: PE dims frozen, buffers and mappings free."""
+    cfg = SearchConfig(steps=200, round_every=100, n_start_points=1,
+                       seed=1, fixed_hw=GEMMINI_DEFAULT, fix_pe_only=True)
+    res = dosa_search(tiny_workload, cfg)
+    assert np.isfinite(res.best_edp)
+    assert res.best_hw.pe_dim == GEMMINI_DEFAULT.pe_dim
+    for m in res.best_mappings:
+        assert m.f[SPATIAL].max() <= GEMMINI_DEFAULT.pe_dim
+
+
+def test_softmax_ordering_mode_runs(tiny_workload):
+    cfg = SearchConfig(steps=60, round_every=30, n_start_points=1, seed=0,
+                       ordering_mode="softmax")
+    res = dosa_search(tiny_workload, cfg)
+    assert np.isfinite(res.best_edp)
+
+
+def test_random_search_and_bo(tiny_workload):
+    from repro.core.baselines import bayes_opt, random_search
+    best_rs, hist_rs = random_search(tiny_workload, n_hw=3, n_map=30,
+                                     seed=0)
+    assert np.isfinite(best_rs)
+    assert hist_rs[-1][1] <= hist_rs[0][1]
+    best_bo, hist_bo = bayes_opt(tiny_workload, n_hw=8, n_map=15,
+                                 n_candidates=50, final_map=30, seed=0)
+    assert np.isfinite(best_bo)
+
+
+def test_start_point_rejection():
+    """Sec. 5.3.1: later start points more than 10x worse than the best
+    seen are rejected (checked indirectly: all accepted starts within
+    the bound of the running best)."""
+    wl = Workload(layers=(Layer.matmul(256, 256, 256),), name="m")
+    cfg = SearchConfig(steps=30, round_every=30, n_start_points=5, seed=3)
+    res = dosa_search(wl, cfg)
+    running_best = np.inf
+    for e in res.start_edps:
+        assert e <= cfg.reject_factor * running_best or not np.isfinite(running_best)
+        running_best = min(running_best, e)

@@ -1,0 +1,75 @@
+"""RTL stand-in + learned latency models (Sec. 4.7 / 6.5 machinery)."""
+import numpy as np
+import pytest
+
+from repro.core.arch import GEMMINI_DEFAULT
+from repro.core.mapping import random_mapping
+from repro.core.oracle import evaluate
+from repro.core.rtl_sim import build_dataset, rtl_latency
+from repro.core.surrogate import (N_FEATURES, featurize, init_mlp,
+                                  n_params, spearman,
+                                  train_direct_model,
+                                  train_residual_model)
+from repro.workloads.dnn_zoo import alexnet
+
+
+def test_mlp_matches_paper_parameter_budget():
+    import jax
+    p = init_mlp(jax.random.PRNGKey(0))
+    assert len(p) == 8                    # 7 hidden + output
+    assert 4500 < n_params(p) < 7000      # paper: 5737
+
+
+def test_rtl_sim_deterministic_and_bounded():
+    layer = alexnet().layers[2]
+    m = random_mapping(np.asarray(layer.dims),
+                       np.random.default_rng(0),
+                       max_pe_dim=GEMMINI_DEFAULT.pe_dim)
+    r = evaluate(m, layer, hw=GEMMINI_DEFAULT)
+    if not r.valid:
+        pytest.skip("random mapping invalid")
+    lat1 = rtl_latency(m, layer, GEMMINI_DEFAULT)
+    lat2 = rtl_latency(m, layer, GEMMINI_DEFAULT)
+    assert lat1 == lat2                      # deterministic oracle
+    assert np.isfinite(lat1) and lat1 > 0
+    # RTL within a sane band of the analytical model
+    assert 0.2 * r.latency < lat1 < 50 * r.latency
+
+
+def test_featurize_shape():
+    layer = alexnet().layers[2]
+    m = random_mapping(np.asarray(layer.dims),
+                       np.random.default_rng(1),
+                       max_pe_dim=GEMMINI_DEFAULT.pe_dim)
+    f = featurize(m, layer, GEMMINI_DEFAULT)
+    assert f.shape == (N_FEATURES,)
+    assert np.isfinite(f).all()
+
+
+def test_spearman_basics():
+    a = np.arange(100.0)
+    assert spearman(a, a) == pytest.approx(1.0)
+    assert spearman(a, -a) == pytest.approx(-1.0)
+    rng = np.random.default_rng(0)
+    assert abs(spearman(rng.normal(size=500),
+                        rng.normal(size=500))) < 0.15
+
+
+def test_model_training_improves_over_analytical_ranking():
+    """Combined model should rank held-out samples at least as well as
+    the analytical model; DNN-only should be clearly worse than
+    combined (the Fig. 10 ordering)."""
+    layers = list(alexnet().layers)
+    feats, ana, rtl, _ = build_dataset(layers, GEMMINI_DEFAULT,
+                                       n_per_layer=60, seed=0)
+    n = len(feats)
+    te = np.arange(n) % 5 == 0
+    tr = ~te
+    res = train_residual_model(feats[tr], ana[tr], rtl[tr], epochs=150)
+    dire = train_direct_model(feats[tr], rtl[tr], epochs=150)
+    s_ana = spearman(ana[te], rtl[te])
+    s_comb = spearman(res.predict_latency(feats[te], ana[te]), rtl[te])
+    s_dnn = spearman(dire.predict_latency(feats[te], ana[te]), rtl[te])
+    assert s_comb > s_ana - 0.03
+    assert s_comb > s_dnn
+    assert s_comb > 0.8

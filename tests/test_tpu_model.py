@@ -1,0 +1,86 @@
+"""TPU-adapted DOSA model + autotuner properties."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.arch import TPU_V5E
+from repro.core.autotune import round_block, tune_matmul_blocks
+from repro.core.tpu_model import (matmul_latency, model_flops,
+                                  mxu_utilization, step_roofline,
+                                  vmem_footprint, vmem_penalty)
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(
+    m=st.integers(64, 8192), n=st.integers(64, 8192),
+    k=st.integers(64, 8192),
+    bm=st.integers(8, 1024), bn=st.integers(8, 1024),
+    bk=st.integers(8, 1024))
+def test_latency_lower_bounded_by_peak(m, n, k, bm, bn, bk):
+    """No tile schedule can beat the peak-FLOPs bound."""
+    lat, aux = matmul_latency(m, n, k, float(bm), float(bn), float(bk))
+    ideal = 2.0 * m * n * k / TPU_V5E.peak_flops
+    assert float(lat) >= ideal * 0.999
+    assert float(aux["hbm_bytes"]) >= 2.0 * (m * k + k * n + m * n) \
+        * 0.49  # each operand moved at least ~once (dtype 2B)
+
+
+def test_mxu_utilization_peaks_at_alignment():
+    full = float(mxu_utilization(128.0, 128.0, 128.0))
+    off = float(mxu_utilization(100.0, 100.0, 100.0))
+    assert full == pytest.approx(1.0)
+    assert off < full
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(dim=st.integers(1, 100000),
+                  target=st.floats(1.0, 5000.0))
+def test_round_block_divides(dim, target):
+    b = round_block(dim, target)
+    assert dim % b == 0 and b >= 1
+
+
+def test_tuner_beats_naive_on_skinny_shapes():
+    """Skinny GEMMs are where naive 128^3 blocks lose badly."""
+    res = tune_matmul_blocks(65536, 128, 4096, steps=100)
+    naive, _ = matmul_latency(65536, 128, 4096, 128.0, 128.0, 128.0)
+    assert res.latency_s <= float(naive)
+    bm, bn, bk = res.blocks
+    assert float(vmem_penalty(bm, bn, bk)) == 0.0  # fits VMEM
+
+
+def test_step_roofline_terms():
+    t = step_roofline(197e12, 819e9, 50e9)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    t2 = step_roofline(197e12, 819e9 * 2, 50e9)
+    assert t2.bound == "memory"
+
+
+def test_model_flops_moe_accounting():
+    from repro.configs import get_config
+    cfg = get_config("kimi_k2_1t")
+    train = model_flops(cfg.n_active_params(), 1e6, train=True)
+    assert train == pytest.approx(6 * cfg.n_active_params() * 1e6)
+    assert cfg.n_active_params() < 0.05 * cfg.n_params()
+
+
+def test_abstract_init_allocates_nothing():
+    """The 1T-param config's abstract init must return only
+    ShapeDtypeStructs (no host RAM for weights)."""
+    from repro.configs import get_config
+    from repro.models.lm import build_model
+    cfg = get_config("kimi_k2_1t")
+    model = build_model(cfg)
+    shapes, specs = model.abstract_init(jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(shapes)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    total = sum(np.prod(l.shape) for l in leaves)
+    assert total > 9e11        # ~1T params described
+    from jax.sharding import PartitionSpec
+    assert all(isinstance(s, PartitionSpec) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec)))

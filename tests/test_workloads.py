@@ -1,0 +1,72 @@
+"""Workload extraction tests: DNN zoo + LM-arch lowering."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, shape_applicable
+from repro.core.problem import Layer
+from repro.workloads import dnn_zoo
+from repro.workloads.lm_extract import extract
+
+
+@pytest.mark.parametrize("name", ["bert", "resnet50", "retinanet",
+                                  "unet", "alexnet", "vgg16",
+                                  "resnext50", "deepbench"])
+def test_dnn_zoo_workloads_valid(name):
+    wl = dnn_zoo.get_workload(name)
+    assert len(wl) > 0
+    for layer in wl.layers:
+        assert all(d >= 1 for d in layer.dims)
+        assert layer.repeat >= 1
+    assert wl.total_macs > 1e8
+
+
+def test_resnet50_macs_match_published():
+    """ResNet-50 @224 is ~4.1 GFLOPs => ~2.05 GMACs (ours omits
+    BN/pool, allow band)."""
+    wl = dnn_zoo.resnet50()
+    assert 1.5e9 < wl.total_macs < 4.5e9
+
+
+def test_bert_macs_match_published():
+    """BERT-base seq-512 forward ~ 4.3e10 MACs class."""
+    wl = dnn_zoo.bert()
+    assert 2e10 < wl.total_macs < 1e11
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_lm_extract_all_applicable_cells(arch):
+    cfg = get_config(arch)
+    n_ok = 0
+    for sname, shape in SHAPES.items():
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            with pytest.raises(ValueError):
+                extract(cfg, shape)
+            continue
+        wl = extract(cfg, shape)
+        n_ok += 1
+        assert len(wl) >= 4
+        for layer in wl.layers:
+            assert all(d >= 1 for d in layer.dims)
+    assert n_ok >= 2
+
+
+def test_lm_extract_flops_consistency():
+    """Extracted MACs of a dense arch's train shape should match
+    ~N_active x tokens within 2x (attention + vocab overheads)."""
+    for arch in ("qwen3_0_6b", "gemma_7b", "phi3_5_moe_42b"):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        wl = extract(cfg, shape)
+        expected = cfg.n_active_params() * shape.tokens  # MACs ~ N*D
+        assert 0.5 * expected < wl.total_macs < 3.0 * expected, arch
+
+
+def test_moe_extraction_counts_active_flops_only():
+    cfg = get_config("kimi_k2_1t")
+    wl = extract(cfg, SHAPES["train_4k"])
+    total = cfg.n_params() * SHAPES["train_4k"].tokens
+    active = cfg.n_active_params() * SHAPES["train_4k"].tokens
+    assert wl.total_macs < 0.1 * total      # far below dense cost
+    assert wl.total_macs > 0.5 * active     # but covers active experts
