@@ -30,6 +30,9 @@ _MODULES = {
 def main() -> None:
     import importlib
     selected = sys.argv[1:] or list(BENCHES)
+    unknown = [k for k in selected if k not in _MODULES]
+    if unknown:
+        sys.exit(f"unknown benchmarks {unknown}; choose from {list(BENCHES)}")
     sc = scale()
     print(f"# repro benchmarks  scale={sc}")
     print("name,us_per_call,derived")
@@ -44,6 +47,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"{key},nan,FAILED", flush=True)
     if failures:
+        # Non-zero exit so CI smoke jobs gate on benchmark regressions.
         sys.exit(f"benchmarks failed: {failures}")
 
 

@@ -3,7 +3,11 @@ paper's technique applied beyond its own workloads: lower qwen3-0.6b
 prefill into the 7-dim layer algebra and co-design a Gemmini-class
 accelerator for it.
 
-    PYTHONPATH=src python examples/dosa_search_lm.py [arch] [shape]
+Runs the batched multi-start engine by default (all start points
+advance through one scanned/vmapped GD program); pass ``--sequential``
+to use the per-start reference driver instead.
+
+    PYTHONPATH=src python examples/dosa_search_lm.py [arch] [shape] [--sequential]
 """
 import sys
 
@@ -12,8 +16,14 @@ from repro.configs.base import SHAPES
 from repro.core.search import SearchConfig, dosa_search
 from repro.workloads.lm_extract import extract
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3_0_6b"
-shape = sys.argv[2] if len(sys.argv) > 2 else "prefill_32k"
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+flags = [a for a in sys.argv[1:] if a.startswith("--")]
+unknown = [a for a in flags if a != "--sequential"]
+if unknown:
+    sys.exit(f"unknown flags {unknown}; the only flag is --sequential")
+sequential = "--sequential" in flags
+arch = args[0] if len(args) > 0 else "qwen3_0_6b"
+shape = args[1] if len(args) > 1 else "prefill_32k"
 
 cfg = get_config(arch)
 wl = extract(cfg, SHAPES[shape])
@@ -22,8 +32,13 @@ print(f"{cfg.name} x {shape}: {len(wl)} unique GEMM layers, "
 for layer in wl.layers:
     print(f"  {layer.name:16s} dims={layer.dims} x{layer.repeat}")
 
-res = dosa_search(wl, SearchConfig(steps=300, round_every=150,
-                                   n_start_points=2, seed=0))
-print(f"\nbest EDP: {res.best_edp:.4e}")
+search_cfg = SearchConfig(steps=300, round_every=150, n_start_points=8,
+                          seed=0)
+res = dosa_search(wl, search_cfg,
+                  population=None if sequential else
+                  search_cfg.n_start_points)
+print(f"\nengine: {'sequential' if sequential else 'batched'} "
+      f"({search_cfg.n_start_points} start points)")
+print(f"best EDP: {res.best_edp:.4e}  ({res.n_evals} samples)")
 print(f"hardware: {res.best_hw.pe_dim}x{res.best_hw.pe_dim} PEs, "
       f"acc {res.best_hw.acc_kb:.0f} KB, sp {res.best_hw.sp_kb:.0f} KB")

@@ -34,6 +34,14 @@ def minimal_hw(mappings: list[Mapping], layers: list[Layer]) -> GemminiHW:
                      sp_kb=float(max(sp_kb, 1)))
 
 
+def minimal_hw_population(population: list[list[Mapping]],
+                          layers: list[Layer]) -> list[GemminiHW]:
+    """Minimal hardware for each member of a population of workload
+    mappings (batched multi-start search): one GemminiHW per member,
+    each the per-parameter max over that member's layers."""
+    return [minimal_hw(mappings, layers) for mappings in population]
+
+
 def random_hw(rng: np.random.Generator) -> GemminiHW:
     """Random valid hardware design (start-point generation, Sec. 5.1)."""
     pe_dim = int(2 ** rng.integers(2, 8))          # 4..128

@@ -261,6 +261,50 @@ def workload_edp(fs, orders, strides, repeats, hw: HWParams | None = None):
 
 
 # ---------------------------------------------------------------------------
+# Population-axis entry points (batched multi-start search): the same
+# closed-form model lifted one axis higher with vmap, so a whole
+# population of candidate workload mappings evaluates as one device
+# program.
+# ---------------------------------------------------------------------------
+
+def infer_hw_population(fs: jnp.ndarray, strides: jnp.ndarray) -> HWParams:
+    """Mapping-first minimal hardware for each population member.
+    fs: (P, L, 2, 4, 7).  Returns HWParams with (P,) leaves."""
+    return jax.vmap(infer_hw, in_axes=(0, None))(fs, strides)
+
+
+def population_eval(fs: jnp.ndarray, orders: jnp.ndarray,
+                    strides: jnp.ndarray, repeats: jnp.ndarray,
+                    hw: HWParams | None = None):
+    """Evaluate a population of workload mappings (Eq. 14 per member).
+
+    fs: (P, L, 2, 4, 7); orders: (P, L, 4).  `hw=None` infers minimal
+    hardware per member (co-search mode); a scalar-leaf HWParams is
+    shared across the population.  Returns (edps (P,), (energies (P, L),
+    latencies (P, L), hw with (P,) leaves))."""
+    return jax.vmap(
+        lambda f, o: workload_eval(f, o, strides, repeats, hw=hw))(fs, orders)
+
+
+def population_edp(fs, orders, strides, repeats,
+                   hw: HWParams | None = None) -> jnp.ndarray:
+    """(P,) network EDPs of a population of candidate mappings."""
+    return population_eval(fs, orders, strides, repeats, hw=hw)[0]
+
+
+def layer_el_all_orderings_population(fs_pop: jnp.ndarray,
+                                      strides: jnp.ndarray, hws: HWParams):
+    """Energy & latency of every layer of every population member under
+    all 27 ordering combos, as one batched computation.  fs_pop:
+    (P, L, 2, 4, 7); hws: HWParams with (P,) leaves.  Returns
+    (energies, latencies), each (P, L, 27)."""
+    per_member = lambda fs, s, c, a, w: jax.vmap(
+        lambda f, st_: layer_el_all_orderings(f, st_, c, a, w))(fs, s)
+    return jax.vmap(per_member, in_axes=(0, None, 0, 0, 0))(
+        fs_pop, strides, hws.c_pe, hws.acc_words, hws.sp_words)
+
+
+# ---------------------------------------------------------------------------
 # Validity penalty (Eq. 18) and fixed-hardware capacity penalties
 # ---------------------------------------------------------------------------
 

@@ -14,6 +14,8 @@ inferred DRAM factor (Sec. 5.3.3) is a positive integer.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, REG, SP
@@ -21,10 +23,17 @@ from .mapping import SPATIAL, TEMPORAL, Mapping
 from .problem import C, K, NDIMS, divisors
 
 
+@functools.lru_cache(maxsize=4096)
+def _divisors_cached(n: int) -> tuple[int, ...]:
+    """Divisor lists recur constantly when rounding whole populations;
+    memoize them (problem dims are small and few)."""
+    return tuple(divisors(n))
+
+
 def _nearest_divisor(n: int, x: float, cap: int | None = None) -> int:
     """Divisor of n nearest to x (ties to the smaller), optionally <= cap."""
     best, bestd = 1, abs(1 - x)
-    for d in divisors(n):
+    for d in _divisors_cached(n):
         if cap is not None and d > cap:
             continue
         dist = abs(d - x)
@@ -72,3 +81,13 @@ def round_all(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
     """Round a whole workload: fs (L,2,4,7), orders (L,4), dims (L,7)."""
     return [round_mapping(fs[i], orders[i], dims[i], pe_cap=pe_cap)
             for i in range(fs.shape[0])]
+
+
+def round_population(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
+                     pe_cap: int = MAX_PE_DIM) -> list[list[Mapping]]:
+    """Round a whole population of workload mappings on the host:
+    fs (P,L,2,4,7), orders (P,L,4), dims (L,7).  Returns one mapping
+    list per population member; the divisor cache is shared across
+    members (every member rounds against the same problem dims)."""
+    return [round_all(fs[p], orders[p], dims, pe_cap=pe_cap)
+            for p in range(fs.shape[0])]

@@ -19,11 +19,24 @@ Protocol details implemented from the paper:
 * every differentiable-model step and every oracle evaluation of a
   rounded mapping counts as one sample (Sec. 6.3 treats them as
   equivalent).
+
+Two execution engines share the protocol:
+
+* the *sequential* reference driver (``dosa_search(..., population=None)``)
+  runs each start point's Adam descent as a Python loop of jitted steps;
+* the *batched* engine (``dosa_search(..., population=P)``) carries a
+  ``(P, L, 2, 4, 7)`` population of log-factor tensors and executes each
+  GD segment between roundings as one ``jax.lax.scan`` whose body is the
+  Adam update of a ``jax.vmap``-ed loss — one device program for the
+  whole population instead of ``P x steps`` tiny dispatches.  Rounding,
+  ordering re-selection and oracle evaluation happen population-wide on
+  the host between segments, and per-start sample accounting keeps
+  ``SearchResult.history`` / ``n_evals`` comparable to the sequential
+  path (identical totals; interleaved order).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Callable
 
@@ -34,13 +47,14 @@ import numpy as np
 from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, SP, GemminiHW
 from .cosa import cosa_map_workload
 from .hw_infer import minimal_hw, random_hw
-from .mapping import (NORDERS, SPATIAL, TEMPORAL, Mapping, stack_mappings)
+from .mapping import SPATIAL, TEMPORAL, Mapping, stack_mappings
 from .model import (HWParams, capacity_penalty, infer_hw,
-                    layer_el_all_orderings, ordering_combos,
+                    infer_hw_population, layer_el_all_orderings,
+                    layer_el_all_orderings_population, ordering_combos,
                     validity_penalty, workload_eval)
 from .oracle import evaluate_workload
 from .problem import C, K, NDIMS, Workload
-from .rounding import round_all
+from .rounding import round_all, round_population
 
 # Free optimization sites: temporal ACC/SP for all dims, temporal REG for
 # weight-irrelevant dims only (one weight register per PE on Gemmini WS),
@@ -53,6 +67,8 @@ FREE_MASK[TEMPORAL, 0, [_P, _Q, _N]] = True
 FREE_MASK[SPATIAL, ACC, C] = True
 FREE_MASK[SPATIAL, SP, K] = True
 _FREE_MASK_J = jnp.asarray(FREE_MASK)
+
+_ADAM_B1, _ADAM_B2, _ADAM_EPS = 0.9, 0.999, 1e-8
 
 
 def build_f(theta: jnp.ndarray, dims: jnp.ndarray) -> jnp.ndarray:
@@ -69,6 +85,16 @@ def theta_from_mappings(mappings: list[Mapping]) -> np.ndarray:
     theta = np.zeros_like(fs)
     np.log(np.maximum(fs, 1.0), out=theta, where=FREE_MASK[None])
     return theta
+
+
+def theta_from_population(population: list[list[Mapping]]) -> np.ndarray:
+    """(P, L, 2, 4, 7) log-factors for a population of workload mappings."""
+    return np.stack([theta_from_mappings(ms) for ms in population])
+
+
+def orders_from_population(population: list[list[Mapping]]) -> np.ndarray:
+    """(P, L, 4) per-level ordering choices for a population."""
+    return np.stack([np.stack([m.order for m in ms]) for ms in population])
 
 
 @dataclasses.dataclass
@@ -109,7 +135,11 @@ def _spatial_cap_penalty(f: jnp.ndarray, pe_cap: float) -> jnp.ndarray:
     return jnp.sum(jnp.maximum(s / pe_cap - 1.0, 0.0))
 
 
-def make_loss(workload: Workload, cfg: SearchConfig):
+def _make_loss_fn(workload: Workload, cfg: SearchConfig):
+    """Raw (unjitted) per-start loss `(theta (L,2,4,7), orders (L,4)) ->
+    scalar`, plus the workload constant arrays.  Both engines build on
+    this: the sequential driver jits its value_and_grad directly, the
+    batched driver lifts it one population axis higher with vmap."""
     dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
     strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
     repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
@@ -176,7 +206,42 @@ def make_loss(workload: Workload, cfg: SearchConfig):
             pen = pen + capacity_penalty(f, strides, hw_fixed)
         return jnp.log(edp) + cfg.penalty_weight * pen
 
-    return jax.jit(jax.value_and_grad(loss)), dims, strides, repeats
+    return loss, dims, strides, repeats
+
+
+# Compiled-engine cache.  Jitting the loss costs seconds of XLA compile
+# per workload; re-deriving it on every dosa_search call would leave
+# nothing warm across repeated searches of the same workload (the common
+# case in benchmarks and sweeps).  Keyed by the workload plus every
+# config field the traced program reads; fields that only steer the host
+# driver (steps, seed, rejection protocol, latency_model) are excluded
+# on purpose.  The surrogate is keyed by identity: its parameters are
+# baked into the trace.
+_ENGINE_CACHE: dict = {}
+_ENGINE_CACHE_MAX = 16
+
+
+def _engine_key(workload: Workload, cfg: SearchConfig, kind: str):
+    return (kind, workload, cfg.lr, cfg.penalty_weight, cfg.ordering_mode,
+            cfg.softmax_temp, cfg.fixed_hw, cfg.fix_pe_only,
+            id(cfg.surrogate) if cfg.surrogate is not None else None)
+
+
+def _cached_engine(workload: Workload, cfg: SearchConfig, kind: str, build):
+    key = _engine_key(workload, cfg, kind)
+    hit = _ENGINE_CACHE.get(key)
+    if hit is None:
+        if len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+        hit = _ENGINE_CACHE[key] = build()
+    return hit
+
+
+def make_loss(workload: Workload, cfg: SearchConfig):
+    def build():
+        loss, dims, strides, repeats = _make_loss_fn(workload, cfg)
+        return jax.jit(jax.value_and_grad(loss)), dims, strides, repeats
+    return _cached_engine(workload, cfg, "sequential", build)
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +249,8 @@ def make_loss(workload: Workload, cfg: SearchConfig):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("lr",))
-def adam_step(theta, grad, m, v, t, lr: float, b1=0.9, b2=0.999, eps=1e-8):
+def adam_step(theta, grad, m, v, t, lr: float, b1=_ADAM_B1, b2=_ADAM_B2,
+              eps=_ADAM_EPS):
     m = b1 * m + (1 - b1) * grad
     v = b2 * v + (1 - b2) * grad * grad
     mh = m / (1 - b1 ** t)
@@ -192,21 +258,56 @@ def adam_step(theta, grad, m, v, t, lr: float, b1=0.9, b2=0.999, eps=1e-8):
     return theta - lr * mh / (jnp.sqrt(vh) + eps), m, v
 
 
+def make_population_runner(workload: Workload, cfg: SearchConfig):
+    """Build the batched GD-segment executor: one jitted function that
+    advances a whole (P, L, 2, 4, 7) population by `n_steps` Adam steps
+    as a single `jax.lax.scan` over the vmapped loss gradient.  Fresh
+    momentum per segment, matching the sequential driver's reset after
+    every rounding.  Cached per (workload, cfg) like `make_loss`."""
+    def build():
+        loss, dims, strides, repeats = _make_loss_fn(workload, cfg)
+        pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0))
+        lr = cfg.lr
+
+        @partial(jax.jit, static_argnames=("n_steps",))
+        def run_segment(theta, orders, n_steps: int):
+            def body(carry, t):
+                th, m, v = carry
+                _, g = pop_grad(th, orders)
+                m = _ADAM_B1 * m + (1 - _ADAM_B1) * g
+                v = _ADAM_B2 * v + (1 - _ADAM_B2) * g * g
+                mh = m / (1 - _ADAM_B1 ** t)
+                vh = v / (1 - _ADAM_B2 ** t)
+                th = th - lr * mh / (jnp.sqrt(vh) + _ADAM_EPS)
+                return (th, m, v), ()
+            ts = jnp.arange(1, n_steps + 1, dtype=theta.dtype)
+            zeros = jnp.zeros_like(theta)
+            (theta, _, _), _ = jax.lax.scan(body, (theta, zeros, zeros), ts)
+            return theta
+
+        return run_segment, dims, strides, repeats
+
+    return _cached_engine(workload, cfg, "population", build)
+
+
+def _segment_lengths(steps: int, round_every: int) -> list[int]:
+    """GD-step counts between consecutive rounding points: the sequential
+    driver rounds at every multiple of `round_every` and at `steps`."""
+    full, rem = divmod(steps, round_every)
+    return [round_every] * full + ([rem] if rem else [])
+
+
 # ---------------------------------------------------------------------------
 # Loop-ordering selection (Sec. 5.2.1): coordinate descent over the 27
 # per-layer combos against overall network EDP (Eq. 14).
 # ---------------------------------------------------------------------------
 
-def select_orderings(fs: np.ndarray, strides: np.ndarray,
-                     repeats: np.ndarray, hw: HWParams,
-                     n_passes: int = 2) -> np.ndarray:
-    combos = ordering_combos()                       # (27, 4)
-    e, l = jax.vmap(lambda f, s: layer_el_all_orderings(
-        f, s, hw.c_pe, hw.acc_words, hw.sp_words))(
-        jnp.asarray(fs), jnp.asarray(strides))
-    e = np.asarray(e) * repeats[:, None]             # (L, 27)
-    l = np.asarray(l) * repeats[:, None]
-    L = fs.shape[0]
+def _coordinate_descent_orderings(e: np.ndarray, l: np.ndarray,
+                                  n_passes: int) -> np.ndarray:
+    """Host-side coordinate descent over per-layer ordering choices.
+    e, l: (L, 27) repeat-scaled energies/latencies.  Returns (L,) combo
+    indices minimizing (sum e) * (sum l)."""
+    L = e.shape[0]
     choice = np.zeros(L, dtype=np.int64)
     for _ in range(n_passes):
         e_tot = e[np.arange(L), choice].sum()
@@ -218,11 +319,41 @@ def select_orderings(fs: np.ndarray, strides: np.ndarray,
             choice[i] = int(np.argmin(edps))
             e_tot = e_rest + e[i, choice[i]]
             l_tot = l_rest + l[i, choice[i]]
+    return choice
+
+
+def select_orderings(fs: np.ndarray, strides: np.ndarray,
+                     repeats: np.ndarray, hw: HWParams,
+                     n_passes: int = 2) -> np.ndarray:
+    combos = ordering_combos()                       # (27, 4)
+    e, l = jax.vmap(lambda f, s: layer_el_all_orderings(
+        f, s, hw.c_pe, hw.acc_words, hw.sp_words))(
+        jnp.asarray(fs), jnp.asarray(strides))
+    e = np.asarray(e) * repeats[:, None]             # (L, 27)
+    l = np.asarray(l) * repeats[:, None]
+    choice = _coordinate_descent_orderings(e, l, n_passes)
     return combos[choice]                            # (L, 4)
 
 
+def select_orderings_population(fs_pop: np.ndarray, strides: np.ndarray,
+                                repeats: np.ndarray, hws: HWParams,
+                                n_passes: int = 2) -> np.ndarray:
+    """Population-wide iterative ordering re-selection: one batched
+    device computation of all (P, L, 27) energy/latency tables, then
+    per-member host coordinate descent.  hws carries (P,) leaves (one
+    inferred/fixed hardware per population member).  Returns (P, L, 4)."""
+    combos = ordering_combos()
+    e, l = layer_el_all_orderings_population(
+        jnp.asarray(fs_pop), jnp.asarray(strides), hws)   # (P, L, 27)
+    e = np.asarray(e) * repeats[None, :, None]
+    l = np.asarray(l) * repeats[None, :, None]
+    return np.stack([
+        combos[_coordinate_descent_orderings(e[p], l[p], n_passes)]
+        for p in range(e.shape[0])])
+
+
 # ---------------------------------------------------------------------------
-# Main search
+# Oracle accounting shared by both engines
 # ---------------------------------------------------------------------------
 
 def _oracle_edp(mappings, workload, cfg) -> float:
@@ -239,52 +370,122 @@ def _oracle_edp(mappings, workload, cfg) -> float:
     return float(edp)
 
 
-def dosa_search(workload: Workload, cfg: SearchConfig) -> SearchResult:
-    rng = np.random.default_rng(cfg.seed)
-    loss_grad, dims_j, strides_j, repeats_j = make_loss(workload, cfg)
-    dims = workload.dims_array()
-    strides = workload.strides_array().astype(float)
-    repeats = workload.repeats_array().astype(float)
+class _Recorder:
+    """Sample accounting shared by the sequential and batched drivers:
+    every differentiable-model step and every oracle evaluation counts
+    as one sample (Sec. 6.3)."""
 
-    best = SearchResult(best_edp=float("inf"), best_mappings=[],
-                        best_hw=GemminiHW(1, 1.0, 1.0), history=[],
-                        n_evals=0, start_edps=[])
-    evals = 0
-    best_start_edp = float("inf")
+    def __init__(self, workload: Workload, cfg: SearchConfig):
+        self.workload, self.cfg = workload, cfg
+        self.evals = 0
+        self.best = SearchResult(best_edp=float("inf"), best_mappings=[],
+                                 best_hw=GemminiHW(1, 1.0, 1.0), history=[],
+                                 n_evals=0, start_edps=[])
 
-    def record(mappings):
-        nonlocal evals
-        edp = _oracle_edp(mappings, workload, cfg)
-        evals += 1
+    def count(self, n: int = 1) -> None:
+        self.evals += n
+
+    def record(self, mappings: list[Mapping]) -> float:
+        """Oracle-evaluate a rounded candidate, update the running best."""
+        cfg, best = self.cfg, self.best
+        edp = _oracle_edp(mappings, self.workload, cfg)
+        self.evals += 1
         if edp < best.best_edp:
             best.best_edp = edp
             best.best_mappings = [m.copy() for m in mappings]
-            hw = minimal_hw(mappings, list(workload.layers))
+            hw = minimal_hw(mappings, list(self.workload.layers))
             if cfg.fixed_hw is not None and cfg.fix_pe_only:
                 hw = GemminiHW(pe_dim=cfg.fixed_hw.pe_dim,
                                acc_kb=hw.acc_kb, sp_kb=hw.sp_kb)
             elif cfg.fixed_hw is not None:
                 hw = cfg.fixed_hw
             best.best_hw = hw
-        best.history.append((evals, best.best_edp))
+        best.history.append((self.evals, best.best_edp))
         return edp
+
+    def finish(self) -> SearchResult:
+        self.best.n_evals = self.evals
+        return self.best
+
+
+# ---------------------------------------------------------------------------
+# Start-point generation with rejection (Sec. 5.3.1)
+# ---------------------------------------------------------------------------
+
+def _generate_start_point(workload: Workload, cfg: SearchConfig,
+                          rng: np.random.Generator, best_start_edp: float,
+                          rec: _Recorder):
+    """One random-hardware + CoSA-seeded start point, rejected (up to
+    `max_reject_tries` times) while its EDP exceeds `reject_factor` x the
+    best start seen so far.  Returns (mappings, edp0, best_start_edp)."""
+    mappings = None
+    for _ in range(cfg.max_reject_tries):
+        hw0 = cfg.fixed_hw if cfg.fixed_hw is not None else random_hw(rng)
+        cand = cosa_map_workload(list(workload.layers), hw0)
+        edp0 = _oracle_edp(cand, workload, cfg)
+        rec.count()
+        if edp0 <= cfg.reject_factor * best_start_edp:
+            mappings = cand
+            best_start_edp = min(best_start_edp, edp0)
+            break
+    if mappings is None:
+        mappings = cand
+    return mappings, edp0, best_start_edp
+
+
+def generate_start_points(workload: Workload, cfg: SearchConfig,
+                          rng: np.random.Generator | None = None):
+    """All `cfg.n_start_points` start points, generated with the running
+    population-wide rejection rule.  Returns (population, start_edps,
+    n_evals_spent) — the standalone entry point used by the batched
+    engine's tests; both search drivers consume the same per-start
+    helper, so the RNG stream (and therefore the start points) are
+    identical across engines for a given seed."""
+    rng = np.random.default_rng(cfg.seed) if rng is None else rng
+    rec = _Recorder(workload, cfg)
+    population, best_start_edp = [], float("inf")
+    for _ in range(cfg.n_start_points):
+        mappings, edp0, best_start_edp = _generate_start_point(
+            workload, cfg, rng, best_start_edp, rec)
+        rec.best.start_edps.append(edp0)
+        population.append(mappings)
+    return population, rec.best.start_edps, rec.evals
+
+
+# ---------------------------------------------------------------------------
+# Main search
+# ---------------------------------------------------------------------------
+
+def dosa_search(workload: Workload, cfg: SearchConfig,
+                population: int | None = None) -> SearchResult:
+    """Run DOSA co-search.  `population=None` is the sequential reference
+    driver; `population=P` advances the start points P at a time through
+    the batched scan/vmap engine (same protocol, same sample counting,
+    same start points for a given seed)."""
+    if population is not None:
+        if population < 1:
+            raise ValueError(f"population must be >= 1, got {population}")
+        return _dosa_search_batched(workload, cfg, int(population))
+    return _dosa_search_sequential(workload, cfg)
+
+
+def _dosa_search_sequential(workload: Workload,
+                            cfg: SearchConfig) -> SearchResult:
+    rng = np.random.default_rng(cfg.seed)
+    loss_grad, dims_j, strides_j, repeats_j = make_loss(workload, cfg)
+    dims = workload.dims_array()
+    strides = workload.strides_array().astype(float)
+    repeats = workload.repeats_array().astype(float)
+
+    rec = _Recorder(workload, cfg)
+    best_start_edp = float("inf")
 
     for sp_i in range(cfg.n_start_points):
         # ---- start-point generation with rejection (Sec. 5.3.1)
-        mappings = None
-        for _ in range(cfg.max_reject_tries):
-            hw0 = cfg.fixed_hw if cfg.fixed_hw is not None else random_hw(rng)
-            cand = cosa_map_workload(list(workload.layers), hw0)
-            edp0 = _oracle_edp(cand, workload, cfg)
-            evals += 1
-            if edp0 <= cfg.reject_factor * best_start_edp:
-                mappings = cand
-                best_start_edp = min(best_start_edp, edp0)
-                break
-        if mappings is None:
-            mappings = cand
-        best.start_edps.append(edp0)
-        record(mappings)
+        mappings, edp0, best_start_edp = _generate_start_point(
+            workload, cfg, rng, best_start_edp, rec)
+        rec.best.start_edps.append(edp0)
+        rec.record(mappings)
 
         theta = jnp.asarray(theta_from_mappings(mappings), dtype=jnp.float32)
         orders = jnp.asarray(np.stack([m.order for m in mappings]))
@@ -297,7 +498,7 @@ def dosa_search(workload: Workload, cfg: SearchConfig) -> SearchResult:
             val, grad = loss_grad(theta, orders)
             theta, m_t, v_t = adam_step(theta, grad, m_t, v_t, float(t),
                                         lr=cfg.lr)
-            evals += 1
+            rec.count()
             if step % cfg.round_every == 0 or step == cfg.steps:
                 f_cont = np.asarray(build_f(theta, dims_j))
                 pe_cap = (cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
@@ -319,7 +520,7 @@ def dosa_search(workload: Workload, cfg: SearchConfig) -> SearchResult:
                     for mp, o in zip(rounded, new_orders):
                         mp.order = o
                     orders = jnp.asarray(new_orders)
-                record(rounded)
+                rec.record(rounded)
                 # Continue GD from the rounded point, fresh momentum.
                 theta = jnp.asarray(theta_from_mappings(rounded),
                                     dtype=jnp.float32)
@@ -327,5 +528,82 @@ def dosa_search(workload: Workload, cfg: SearchConfig) -> SearchResult:
                 v_t = jnp.zeros_like(theta)
                 t = 0
 
-    best.n_evals = evals
-    return best
+    return rec.finish()
+
+
+def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
+                         population: int) -> SearchResult:
+    """Batched multi-start engine: the GD inner loop over every start
+    point in a chunk runs as a single scanned, vmapped device program;
+    the host only intervenes at rounding points (Sec. 5.3.2), where the
+    whole chunk is rounded, re-ordered and oracle-evaluated at once."""
+    rng = np.random.default_rng(cfg.seed)
+    run_segment, dims_j, strides_j, repeats_j = \
+        make_population_runner(workload, cfg)
+    dims = workload.dims_array()
+    strides = workload.strides_array().astype(float)
+    repeats = workload.repeats_array().astype(float)
+    pe_cap = (cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
+              else MAX_PE_DIM)
+
+    rec = _Recorder(workload, cfg)
+
+    # ---- population-wide start generation with rejection (Sec. 5.3.1).
+    # Start points consume the RNG in the same order as the sequential
+    # driver, so both engines descend from identical populations.
+    starts, best_start_edp = [], float("inf")
+    for _ in range(cfg.n_start_points):
+        mappings, edp0, best_start_edp = _generate_start_point(
+            workload, cfg, rng, best_start_edp, rec)
+        rec.best.start_edps.append(edp0)
+        starts.append(mappings)
+
+    segments = _segment_lengths(cfg.steps, cfg.round_every)
+
+    if cfg.fixed_hw is not None and not cfg.fix_pe_only:
+        hw_fixed = HWParams(
+            c_pe=jnp.asarray(float(cfg.fixed_hw.c_pe)),
+            acc_words=jnp.asarray(float(cfg.fixed_hw.acc_words)),
+            sp_words=jnp.asarray(float(cfg.fixed_hw.sp_words)))
+    else:
+        hw_fixed = None
+
+    for lo in range(0, len(starts), population):
+        chunk = starts[lo:lo + population]
+        P = len(chunk)
+        for mappings in chunk:
+            rec.record(mappings)
+
+        theta = jnp.asarray(theta_from_population(chunk), dtype=jnp.float32)
+        orders = jnp.asarray(orders_from_population(chunk))
+
+        for n_steps in segments:
+            theta = run_segment(theta, orders, n_steps)
+            rec.count(n_steps * P)   # one sample per GD step per start
+
+            f_cont = np.asarray(
+                jax.vmap(build_f, in_axes=(0, None))(theta, dims_j))
+            rounded_pop = round_population(f_cont, np.asarray(orders), dims,
+                                           pe_cap=pe_cap)
+            if cfg.ordering_mode in ("iterative", "softmax"):
+                fs_pop = np.stack(
+                    [stack_mappings(ms)[0] for ms in rounded_pop])
+                if hw_fixed is not None:
+                    hws = jax.tree_util.tree_map(
+                        lambda x: jnp.broadcast_to(x, (P,)), hw_fixed)
+                else:
+                    hws = infer_hw_population(jnp.asarray(fs_pop),
+                                              jnp.asarray(strides))
+                new_orders = select_orderings_population(fs_pop, strides,
+                                                         repeats, hws)
+                for ms, no in zip(rounded_pop, new_orders):
+                    for mp, o in zip(ms, no):
+                        mp.order = o
+            for ms in rounded_pop:
+                rec.record(ms)
+            # Continue GD from the rounded points, fresh momentum.
+            theta = jnp.asarray(theta_from_population(rounded_pop),
+                                dtype=jnp.float32)
+            orders = jnp.asarray(orders_from_population(rounded_pop))
+
+    return rec.finish()

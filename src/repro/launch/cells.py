@@ -260,7 +260,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     model = build_model(cfg)
     res.n_params = float(cfg.n_params())
 
-    with jax.sharding.set_mesh(mesh):
+    # jax.sharding.set_mesh only exists on newer jax (>= 0.5); older
+    # versions use the Mesh itself as the ambient-mesh context manager.
+    # Shardings are passed explicitly below either way.
+    _mesh_ctx = getattr(jax.sharding, "set_mesh", lambda m: m)
+    with _mesh_ctx(mesh):
         t0 = time.time()
         lowered = _lower_cell(cfg, shape, mesh, mode, unroll=False,
                               train_overrides=train_overrides)

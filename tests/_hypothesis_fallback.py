@@ -1,0 +1,104 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+The property tests in this suite only use a small slice of the
+hypothesis API: ``given`` / ``settings`` decorators and the
+``sampled_from`` / ``integers`` / ``floats`` / ``tuples`` / ``composite``
+strategies.  This module reimplements that slice as seeded random
+sampling (no shrinking, no example database) so the suite still
+exercises the properties on machines where ``pip install -e .[test]``
+has not run.  ``conftest.py`` installs it into ``sys.modules`` under the
+name ``hypothesis`` only when the real package is missing; with the real
+package installed (as in CI) this file is inert.
+
+The example count is capped (default 20, override with
+``REPRO_FALLBACK_MAX_EXAMPLES``) to keep the fallback suite fast.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import types
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_FALLBACK_MAX_EXAMPLES", "20"))
+
+
+class _Strategy:
+    """A strategy is just a seeded sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def _sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _tuples(*strategies):
+    return _Strategy(
+        lambda rng: tuple(s.example_from(rng) for s in strategies))
+
+
+def _composite(fn):
+    """hypothesis.strategies.composite: fn(draw, *args) -> value."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example_from(rng), *args, **kwargs)
+        return _Strategy(sample)
+
+    return builder
+
+
+class settings:  # noqa: N801 - mirrors the hypothesis name
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None)
+            n = min(cfg.max_examples if cfg else 20, _MAX_EXAMPLES_CAP)
+            # Seed per test so runs are deterministic and independent.
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max(n, 1)):
+                drawn = [s.example_from(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example_from(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # Hide the wrapped signature so pytest does not mistake the
+        # drawn arguments for fixtures (real hypothesis does the same).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorator
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.sampled_from = _sampled_from
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.tuples = _tuples
+strategies.composite = _composite

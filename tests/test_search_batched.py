@@ -1,0 +1,150 @@
+"""Tests for the batched multi-start co-search engine (vmap over the
+population + lax.scan over GD steps)."""
+import numpy as np
+import pytest
+
+from repro.core.hw_infer import minimal_hw_population
+from repro.core.oracle import evaluate
+from repro.core.problem import Layer, Workload
+from repro.core.search import (SearchConfig, dosa_search,
+                               generate_start_points)
+
+
+@pytest.fixture(scope="module")
+def two_layer_workload() -> Workload:
+    return Workload(layers=(
+        Layer.conv(64, 64, 3, 56, name="c1"),
+        Layer.matmul(512, 1024, 768, name="m1"),
+    ), name="two")
+
+
+def test_batched_matches_sequential(two_layer_workload):
+    """Seeded equivalence: both engines descend from identical start
+    points (same RNG stream) through the same protocol, so the best
+    oracle EDP and the total sample count must agree."""
+    cfg = SearchConfig(steps=60, round_every=30, n_start_points=2, seed=0)
+    seq = dosa_search(two_layer_workload, cfg)
+    bat = dosa_search(two_layer_workload, cfg, population=2)
+    assert bat.best_edp == pytest.approx(seq.best_edp, rel=1e-6)
+    assert bat.n_evals == seq.n_evals
+    assert bat.start_edps == seq.start_edps
+    # batched history is interleaved differently but covers the same
+    # cumulative-sample range and ends at the same best
+    assert bat.history[-1][0] == seq.history[-1][0]
+    assert bat.history[-1][1] == pytest.approx(seq.history[-1][1], rel=1e-6)
+
+
+def test_batched_chunks_smaller_than_starts(two_layer_workload):
+    """population < n_start_points processes the starts in chunks; the
+    set of descents (and hence the best) is unchanged."""
+    cfg = SearchConfig(steps=40, round_every=20, n_start_points=3, seed=2)
+    full = dosa_search(two_layer_workload, cfg, population=3)
+    chunked = dosa_search(two_layer_workload, cfg, population=2)
+    assert chunked.best_edp == pytest.approx(full.best_edp, rel=1e-6)
+    assert chunked.n_evals == full.n_evals
+
+
+def test_batched_result_reevaluates_and_is_monotone(two_layer_workload):
+    from repro.core.oracle import evaluate_workload
+    cfg = SearchConfig(steps=60, round_every=30, n_start_points=2, seed=1)
+    res = dosa_search(two_layer_workload, cfg, population=2)
+    assert np.isfinite(res.best_edp)
+    assert res.best_edp <= min(res.start_edps)
+    edp, _ = evaluate_workload(res.best_mappings, two_layer_workload.layers)
+    assert edp == pytest.approx(res.best_edp, rel=1e-6)
+    bests = [b for _, b in res.history]
+    assert all(b2 <= b1 + 1e-9 for b1, b2 in zip(bests, bests[1:]))
+
+
+def test_batched_fixed_hw_mode(two_layer_workload):
+    from repro.core.arch import GEMMINI_DEFAULT
+    from repro.core.mapping import SPATIAL
+    cfg = SearchConfig(steps=40, round_every=20, n_start_points=2, seed=1,
+                       fixed_hw=GEMMINI_DEFAULT, fix_pe_only=True)
+    res = dosa_search(two_layer_workload, cfg, population=2)
+    assert np.isfinite(res.best_edp)
+    assert res.best_hw.pe_dim == GEMMINI_DEFAULT.pe_dim
+    for m in res.best_mappings:
+        assert m.f[SPATIAL].max() <= GEMMINI_DEFAULT.pe_dim
+
+
+def test_population_rejection():
+    """Sec. 5.3.1 population-wide: a candidate start more than
+    `reject_factor` x the best seen start is rejected and redrawn; the
+    returned EDPs obey the bound against the running best.  A scripted
+    latency model makes the rejection deterministic."""
+    wl = Workload(layers=(Layer.matmul(64, 64, 64),), name="m")
+    scripted = iter([1.0,            # start 0, accepted (first)
+                     50.0,           # start 1 try 1: > 10x1.0, rejected
+                     200.0,          # start 1 try 2: rejected
+                     5.0,            # start 1 try 3: accepted
+                     9.0])           # start 2, accepted
+
+    def latency_model(mappings, workload):
+        return next(scripted)
+
+    cfg = SearchConfig(n_start_points=3, seed=0, reject_factor=10.0,
+                       latency_model=latency_model)
+    starts, edps, n_evals = generate_start_points(wl, cfg)
+    assert len(starts) == 3
+    assert edps == [1.0, 5.0, 9.0]
+    assert n_evals == 5          # every rejected try still costs a sample
+    running_best = float("inf")
+    for e in edps:
+        assert e <= cfg.reject_factor * running_best \
+            or not np.isfinite(running_best)
+        running_best = min(running_best, e)
+
+
+def test_rejection_gives_up_after_max_tries():
+    wl = Workload(layers=(Layer.matmul(64, 64, 64),), name="m")
+    edps = iter([1.0] + [99.0] * 10)
+
+    def latency_model(mappings, workload):
+        return next(edps)
+
+    cfg = SearchConfig(n_start_points=2, seed=0, reject_factor=10.0,
+                       max_reject_tries=10, latency_model=latency_model)
+    starts, start_edps, n_evals = generate_start_points(wl, cfg)
+    # start 1 exhausts its tries and keeps the last rejected candidate
+    assert start_edps == [1.0, 99.0]
+    assert n_evals == 11
+
+
+def test_population_eval_matches_per_member(two_layer_workload):
+    """The population-axis model entry points are the per-member eval
+    lifted with vmap: each member's EDP must match evaluating it alone."""
+    import jax.numpy as jnp
+
+    from repro.core.mapping import stack_mappings
+    from repro.core.model import population_edp, population_eval, workload_edp
+
+    cfg = SearchConfig(n_start_points=3, seed=5)
+    starts, _, _ = generate_start_points(two_layer_workload, cfg)
+    fs = jnp.asarray(np.stack([stack_mappings(ms)[0] for ms in starts]))
+    orders = jnp.asarray(np.stack([stack_mappings(ms)[1] for ms in starts]))
+    strides = jnp.asarray(two_layer_workload.strides_array(),
+                          dtype=jnp.float32)
+    repeats = jnp.asarray(two_layer_workload.repeats_array(),
+                          dtype=jnp.float32)
+    edps = population_edp(fs, orders, strides, repeats)
+    assert edps.shape == (3,)
+    for p in range(3):
+        solo = workload_edp(fs[p], orders[p], strides, repeats)
+        assert float(edps[p]) == pytest.approx(float(solo), rel=1e-6)
+    _, (energies, latencies, hws) = population_eval(fs, orders, strides,
+                                                    repeats)
+    assert energies.shape == latencies.shape == (3, len(two_layer_workload))
+    assert hws.c_pe.shape == (3,)
+
+
+def test_minimal_hw_population(two_layer_workload):
+    cfg = SearchConfig(n_start_points=3, seed=4)
+    starts, _, _ = generate_start_points(two_layer_workload, cfg)
+    hws = minimal_hw_population(starts, list(two_layer_workload.layers))
+    assert len(hws) == 3
+    # each member's minimal hardware actually supports its mappings
+    for mappings, hw in zip(starts, hws):
+        for m, layer in zip(mappings, two_layer_workload.layers):
+            r = evaluate(m, layer, hw=hw)
+            assert r.valid, r.reason
