@@ -107,23 +107,20 @@ BASELINE_ACCELS = {
 
 def bandwidth_words_per_cycle(c_pe):
     """Per-level bandwidth in words/cycle [REG, ACC, SP, DRAM] (Table 2).
-    Works with python scalars, numpy, or jax arrays for `c_pe`."""
-    sq = c_pe ** 0.5
-    return [2.0 * c_pe, 2.0 * sq, 2.0 * sq, DRAM_BW]
+    Works with python scalars, numpy, or jax arrays for `c_pe`.
+    Delegates to the compiled `GEMMINI_SPEC` (archspec.py), the single
+    source of the per-level bandwidth models."""
+    from .archspec import GEMMINI_SPEC, compile_spec
+    return compile_spec(GEMMINI_SPEC).bandwidth(c_pe)
 
 
 def epa_per_level(c_pe, acc_words, sp_words):
     """Per-level energy/access [REG, ACC, SP, DRAM] given hardware params.
-    Capacity-dependent SRAM EPA per Table 2."""
-    acc_kb = acc_words * WORD_BYTES[ACC] / 1024.0
-    sp_kb = sp_words * WORD_BYTES[SP] / 1024.0
-    sq = c_pe ** 0.5
-    return [
-        EPA_REG,
-        EPA_ACC_BASE + EPA_ACC_SLOPE * acc_kb / sq,
-        EPA_SP_BASE + EPA_SP_SLOPE * sp_kb,
-        EPA_DRAM,
-    ]
+    Capacity-dependent SRAM EPA per Table 2.  Delegates to the compiled
+    `GEMMINI_SPEC` (archspec.py), the single source of the EPA models."""
+    from .archspec import GEMMINI_SPEC, compile_spec
+    return compile_spec(GEMMINI_SPEC).epa(
+        c_pe, [0.0, acc_words, sp_words, 0.0])
 
 
 # ---------------------------------------------------------------------------

@@ -1,37 +1,59 @@
 """Mapping-first minimal hardware parameterization (Sec. 4.1, Fig. 3).
 
-Converts a set of layerwise (integer) mappings into the minimal Gemmini
-configuration that supports all of them: per-parameter max across
-layers, PE array capped at 128x128, SRAM sizes rounded up to 1 KB
-(Sec. 6.1).
+Converts a set of layerwise (integer) mappings into the minimal
+hardware configuration of a target `ArchSpec` that supports all of
+them: per-parameter max across layers, PE array capped at the spec's
+limit, SRAM sizes rounded up to the spec's increment (Sec. 6.1).
+
+`minimal_hw` / `random_hw` are the legacy Gemmini entry points
+(returning `GemminiHW`); the `*_for` forms work for any compiled spec
+and return the generic `HWConfig` (or `GemminiHW` for the Gemmini spec,
+so downstream code sees the familiar type).
 """
 from __future__ import annotations
 
-import math
-
 import numpy as np
 
-from .arch import (ACC, MAX_PE_DIM, SP, SRAM_ROUND_BYTES, WORD_BYTES,
-                   GemminiHW)
+from .arch import GemminiHW
+from .archspec import GEMMINI_SPEC, HWConfig, compile_spec, resolve_spec
 from .mapping import SPATIAL, Mapping
 from .oracle import _caps
-from .problem import C, K, I_T, O_T, W_T, Layer
+from .problem import Layer
+
+
+def minimal_hw_spec(mappings: list[Mapping], layers: list[Layer],
+                    spec=None) -> HWConfig:
+    """Minimal hardware point of a spec supporting every mapping."""
+    cspec = resolve_spec(spec)
+    pe_dim = 1
+    req = [0.0] * len(cspec.searched_levels)
+    for m, layer in zip(mappings, layers):
+        caps = _caps(m, layer)
+        for (lvl, d) in cspec.spatial_sites:
+            pe_dim = max(pe_dim, int(round(m.f[SPATIAL, lvl, d])))
+        for j, i in enumerate(cspec.searched_levels):
+            words = sum(float(caps[i, t]) for t in range(3)
+                        if cspec.b_matrix[i, t])
+            req[j] = max(req[j], words)
+    pe_dim = min(pe_dim, cspec.spec.max_pe_dim)
+    if cspec.spec.fixed_pe_dim is not None:
+        pe_dim = cspec.spec.fixed_pe_dim
+    return HWConfig(pe_dim=pe_dim, cap_kb=cspec.round_caps(req))
+
+
+def minimal_hw_for(cspec, mappings: list[Mapping], layers: list[Layer]):
+    """Spec-dispatching form: `GemminiHW` for the Gemmini spec (legacy
+    type expected by callers/tests), `HWConfig` otherwise."""
+    hw = minimal_hw_spec(mappings, layers, spec=cspec)
+    if resolve_spec(cspec).spec is GEMMINI_SPEC:
+        return GemminiHW(pe_dim=hw.pe_dim, acc_kb=hw.cap_kb[0],
+                         sp_kb=hw.cap_kb[1])
+    return hw
 
 
 def minimal_hw(mappings: list[Mapping], layers: list[Layer]) -> GemminiHW:
-    pe_dim, acc_words, sp_words = 1, 0.0, 0.0
-    for m, layer in zip(mappings, layers):
-        caps = _caps(m, layer)
-        pe_dim = max(pe_dim,
-                     int(round(m.f[SPATIAL, ACC, C])),
-                     int(round(m.f[SPATIAL, SP, K])))
-        acc_words = max(acc_words, float(caps[ACC, O_T]))
-        sp_words = max(sp_words, float(caps[SP, W_T] + caps[SP, I_T]))
-    pe_dim = min(pe_dim, MAX_PE_DIM)
-    acc_kb = math.ceil(acc_words * WORD_BYTES[ACC] / SRAM_ROUND_BYTES)
-    sp_kb = math.ceil(sp_words * WORD_BYTES[SP] / SRAM_ROUND_BYTES)
-    return GemminiHW(pe_dim=pe_dim, acc_kb=float(max(acc_kb, 1)),
-                     sp_kb=float(max(sp_kb, 1)))
+    """Legacy Gemmini entry point."""
+    return minimal_hw_for(compile_spec(GEMMINI_SPEC), mappings, layers)
 
 
 def minimal_hw_population(population: list[list[Mapping]],
@@ -42,9 +64,35 @@ def minimal_hw_population(population: list[list[Mapping]],
     return [minimal_hw(mappings, layers) for mappings in population]
 
 
+def random_hw_spec(rng: np.random.Generator, spec=None) -> HWConfig:
+    """Random valid hardware design (start-point generation, Sec. 5.1).
+    Draw order (PE side first, then each searched level inner->outer)
+    matches the legacy Gemmini generator, so seeded RNG streams are
+    engine- and spec-path-independent."""
+    cspec = resolve_spec(spec)
+    lo, hi = cspec.spec.rand_pe_log2
+    pe_dim = int(2 ** rng.integers(lo, hi))
+    if cspec.spec.fixed_pe_dim is not None:
+        pe_dim = cspec.spec.fixed_pe_dim
+    kbs = []
+    for i in cspec.searched_levels:
+        lvl = cspec.spec.levels[i]
+        klo, khi = lvl.rand_log2_kb if lvl.rand_log2_kb is not None \
+            else (3, 12)
+        kbs.append(float(2 ** rng.integers(klo, khi)))
+    return HWConfig(pe_dim=pe_dim, cap_kb=tuple(kbs))
+
+
+def random_hw_for(cspec, rng: np.random.Generator):
+    """Spec-dispatching form of `random_hw` (see `minimal_hw_for`)."""
+    hw = random_hw_spec(rng, spec=cspec)
+    if resolve_spec(cspec).spec is GEMMINI_SPEC:
+        return GemminiHW(pe_dim=hw.pe_dim, acc_kb=hw.cap_kb[0],
+                         sp_kb=hw.cap_kb[1])
+    return hw
+
+
 def random_hw(rng: np.random.Generator) -> GemminiHW:
-    """Random valid hardware design (start-point generation, Sec. 5.1)."""
-    pe_dim = int(2 ** rng.integers(2, 8))          # 4..128
-    acc_kb = float(2 ** rng.integers(3, 10))       # 8 KB .. 512 KB
-    sp_kb = float(2 ** rng.integers(5, 12))        # 32 KB .. 2 MB
-    return GemminiHW(pe_dim=pe_dim, acc_kb=acc_kb, sp_kb=sp_kb)
+    """Legacy Gemmini entry point: 4..128 PEs, 8..512 KB accumulator,
+    32 KB..2 MB scratchpad."""
+    return random_hw_for(compile_spec(GEMMINI_SPEC), rng)

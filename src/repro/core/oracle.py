@@ -7,17 +7,23 @@ counterpart.  `benchmarks/fig4_correlation.py` correlates
 `core/model.py` against this oracle exactly as the paper's Fig. 4
 correlates DOSA against Timeloop.
 
+Like the closed-form model, the oracle is architecture-generic: it
+walks the memory-level chains, EPA and bandwidth models of a
+`CompiledSpec` (default: Gemmini), so every `ArchSpec` target gets an
+independent cross-check for free.
+
 Deliberate fidelity details:
 
 * integer arithmetic over a validated integer mapping;
 * walks the loop nest explicitly (per level, per loop position) to
   compute reuse, instead of the closed-form masked products;
-* quantizes DRAM traffic to `DRAM_BLOCK_WORDS` blocks with a ceiling —
-  the behaviour the paper names as the source of its small-layer
-  Fig. 4 outliers ("Timeloop uses a ceiling function to compute energy
-  based on the number of blocks accessed in DRAM");
-* rejects invalid mappings (capacity overflow under fixed hardware,
-  non-divisor factors, PE overflow) by returning `inf`.
+* quantizes backing-store traffic to `dram_block_words` blocks with a
+  ceiling — the behaviour the paper names as the source of its
+  small-layer Fig. 4 outliers ("Timeloop uses a ceiling function to
+  compute energy based on the number of blocks accessed in DRAM");
+* rejects invalid mappings (capacity overflow under fixed hardware or
+  fixed-silicon levels, non-divisor factors, PE overflow) by returning
+  `inf`.
 """
 from __future__ import annotations
 
@@ -26,12 +32,13 @@ import math
 
 import numpy as np
 
-from .arch import (ACC, DRAM, DRAM_BLOCK_WORDS, EPA_MAC, NLEVELS, REG, SP,
-                   GemminiHW, bandwidth_words_per_cycle, epa_per_level)
+from .archspec import CompiledSpec, resolve_spec
 from .mapping import ORDER_TABLE, SPATIAL, TEMPORAL, Mapping
 from .problem import (C, K, N, NDIMS, P, Q, R, S, REL, I_T, O_T, W_T, Layer)
 
-TENSOR_LEVELS = {W_T: (REG, SP, DRAM), I_T: (SP, DRAM), O_T: (ACC, DRAM)}
+# Legacy constant (Gemmini chains); the generic path reads
+# `cspec.tensor_levels`.
+TENSOR_LEVELS = {W_T: (0, 2, 3), I_T: (2, 3), O_T: (1, 3)}
 
 
 @dataclasses.dataclass
@@ -39,8 +46,8 @@ class OracleResult:
     latency: float
     energy: float
     edp: float
-    accesses: np.ndarray        # (4,)
-    caps: np.ndarray            # (4, 3)
+    accesses: np.ndarray        # (n_levels,)
+    caps: np.ndarray            # (n_levels, 3)
     valid: bool
     reason: str = ""
 
@@ -51,14 +58,15 @@ def _tile_extent(m: Mapping, level: int, dim: int) -> int:
     ext = 1
     for j in range(0, level + 1):
         ext *= int(round(m.f[TEMPORAL, j, dim]))
-    for j in range(NLEVELS):
+    for j in range(m.f.shape[1]):
         ext *= int(round(m.f[SPATIAL, j, dim]))
     return ext
 
 
 def _caps(m: Mapping, layer: Layer) -> np.ndarray:
-    caps = np.zeros((NLEVELS, 3))
-    for i in range(NLEVELS):
+    n_levels = m.f.shape[1]
+    caps = np.zeros((n_levels, 3))
+    for i in range(n_levels):
         w = 1
         for d in (R, S, C, K):
             w *= _tile_extent(m, i, d)
@@ -78,7 +86,7 @@ def _fill_multiplier(m: Mapping, level: int, tensor: int) -> int:
     factor > 1 lies strictly inner to it."""
     mult = 1
     seen_relevant = False
-    for j in range(level + 1, NLEVELS):
+    for j in range(level + 1, m.f.shape[1]):
         order = ORDER_TABLE[int(m.order[j])]
         for dim in order:                     # innermost -> outermost
             f = int(round(m.f[TEMPORAL, j, dim]))
@@ -100,74 +108,89 @@ def _spatial_discount(m: Mapping, level: int, tensor: int) -> int:
     return disc
 
 
-def evaluate(m: Mapping, layer: Layer, hw: GemminiHW | None = None,
-             quantize_dram: bool = True) -> OracleResult:
+def evaluate(m: Mapping, layer: Layer, hw=None,
+             quantize_dram: bool = True, spec=None) -> OracleResult:
     """Evaluate one layer's mapping.  `hw=None` => mapping-first mode
-    (minimal hardware inferred from this mapping alone)."""
+    (minimal hardware inferred from this mapping alone).  `hw` may be a
+    legacy `GemminiHW` or a spec-generic `HWConfig`; `spec` selects the
+    target architecture (default Gemmini)."""
+    cspec = resolve_spec(spec)
+    n_levels, backing = cspec.n_levels, cspec.backing
     dims = np.asarray(layer.dims)
     # ----- validity
     prod = m.f.prod(axis=(0, 1))
     if not np.allclose(prod, dims, rtol=1e-9, atol=1e-6):
-        return _invalid("factor products != dims")
+        return _invalid("factor products != dims", n_levels)
     if np.any(m.f < 1.0 - 1e-9):
-        return _invalid("factor < 1")
+        return _invalid("factor < 1", n_levels)
     fr = np.round(m.f)
     if not np.allclose(m.f, fr, atol=1e-6):
-        return _invalid("non-integer factors")
+        return _invalid("non-integer factors", n_levels)
 
-    # Gemmini WS registers hold exactly one weight per PE: temporal
-    # factors of weight-relevant dims (R,S,C,K) at the register level
-    # are not realizable.
-    for d in (0, 1, 4, 5):                      # R, S, C, K
+    # Level-0 registers hold exactly one element per PE: temporal
+    # factors are only realizable for the dataflow's level-0 dims
+    # (weight-irrelevant P/Q/N on Gemmini WS).
+    for d in range(NDIMS):
+        if d in cspec.spec.level0_temporal_dims:
+            continue
         if int(round(m.f[TEMPORAL, 0, d])) != 1:
-            return _invalid("weight-relevant temporal factor at registers")
+            return _invalid("unrealizable temporal factor at registers",
+                            n_levels)
 
     caps = _caps(m, layer)
-    spatial_c = int(round(m.f[SPATIAL, ACC, C]))
-    spatial_k = int(round(m.f[SPATIAL, SP, K]))
-    pe_dim = max(spatial_c, spatial_k)
+    site_factors = [int(round(m.f[SPATIAL, lvl, d]))
+                    for (lvl, d) in cspec.spatial_sites]
+    pe_dim = max(site_factors, default=1)
+
+    fixed = dict(cspec.fixed_capacity)
     if hw is None:
-        from .arch import MAX_PE_DIM
-        if pe_dim > MAX_PE_DIM:
-            return _invalid("PE array exceeds 128x128 cap")
-        c_pe = pe_dim ** 2
-        acc_words = caps[ACC, O_T]              # B-masked (Eq. 5)
-        sp_words = caps[SP, W_T] + caps[SP, I_T]
+        if pe_dim > cspec.spec.max_pe_dim:
+            return _invalid("PE array exceeds the spec cap", n_levels)
+        side = cspec.spec.fixed_pe_dim or pe_dim
+        c_pe = side * side
+        cap_words = np.full(n_levels, np.inf)
+        for i in cspec.searched_levels:        # B-masked (Eq. 5)
+            cap_words[i] = sum(caps[i, t] for t in range(3)
+                               if cspec.b_matrix[i, t])
+        for i, words in fixed.items():
+            cap_words[i] = words
     else:
-        c_pe = hw.c_pe
-        acc_words = hw.acc_words
-        sp_words = hw.sp_words
+        c_pe, cap_words = cspec.hw_words(hw)
         if pe_dim > hw.pe_dim:
-            return _invalid("PE array overflow")
-        if caps[ACC, O_T] > acc_words + 1e-6:
-            return _invalid("accumulator overflow")
-        if caps[SP, W_T] + caps[SP, I_T] > sp_words + 1e-6:
-            return _invalid("scratchpad overflow")
+            return _invalid("PE array overflow", n_levels)
+    # Constrained capacities (fixed silicon always; searched levels when
+    # hardware is given) must hold the mapping's tiles.
+    check = (list(fixed) if hw is None
+             else list(cspec.searched_levels) + list(fixed))
+    for i in check:
+        req = sum(caps[i, t] for t in range(3) if cspec.b_matrix[i, t])
+        if req > cap_words[i] + 1e-6:
+            return _invalid(f"{cspec.level_names[i]} overflow", n_levels)
 
     macs = int(np.prod(dims, dtype=np.float64))
 
-    reads = np.zeros(NLEVELS)
-    writes = np.zeros(NLEVELS)
-    dram_parts: list[float] = []   # per-tensor DRAM traffic components
+    reads = np.zeros(n_levels)
+    writes = np.zeros(n_levels)
+    dram_parts: list[float] = []   # per-tensor backing traffic components
     fills = {}
-    for t, levels in TENSOR_LEVELS.items():
+    for t, levels in cspec.tensor_levels.items():
         for i in levels:
             fills[(t, i)] = caps[i, t] * _fill_multiplier(m, i, t)
 
     for t in (W_T, I_T):
-        levels = TENSOR_LEVELS[t]
+        levels = cspec.tensor_levels[t]
         reads[levels[0]] += macs / _spatial_discount(m, levels[0], t)
         for pos in range(1, len(levels)):
             i, prev = levels[pos], levels[pos - 1]
             amount = fills[(t, prev)] / _spatial_discount(m, i, t)
             reads[i] += amount
-            if i == DRAM:
+            if i == backing:
                 dram_parts.append(amount)
         for i in levels:
-            if i != DRAM:
+            if i != backing:
                 writes[i] += fills[(t, i)]
 
-    acc_lvl, top = TENSOR_LEVELS[O_T]
+    acc_lvl, top = cspec.tensor_levels[O_T]
     upd = macs / _spatial_discount(m, acc_lvl, O_T)
     nres = fills[(O_T, acc_lvl)]
     osize = caps[top, O_T]
@@ -180,41 +203,47 @@ def evaluate(m: Mapping, layer: Layer, hw: GemminiHW | None = None,
 
     accesses = reads + writes
     if quantize_dram:
-        # Timeloop quantizes each tensor's DRAM transfers to blocks with
-        # a ceiling — the paper's Fig. 4 small-layer outlier mechanism.
+        # Timeloop quantizes each tensor's backing-store transfers to
+        # blocks with a ceiling — the paper's Fig. 4 small-layer
+        # outlier mechanism.
+        block = cspec.spec.dram_block_words
         accesses = accesses.copy()
-        accesses[DRAM] = sum(
-            math.ceil(p / DRAM_BLOCK_WORDS) * DRAM_BLOCK_WORDS
-            for p in dram_parts if p > 0)
+        accesses[backing] = sum(
+            math.ceil(p / block) * block for p in dram_parts if p > 0)
 
-    bw = bandwidth_words_per_cycle(float(c_pe))
-    mem_lat = [accesses[i] / bw[i] for i in range(NLEVELS)]
-    compute_lat = macs / (spatial_c * spatial_k)
+    bw = cspec.bandwidth(float(c_pe))
+    mem_lat = [accesses[i] / bw[i] for i in range(n_levels)]
+    utilized = 1
+    for s in site_factors:
+        utilized *= s
+    compute_lat = macs / utilized
     latency = max(compute_lat, max(mem_lat))
 
-    epa = epa_per_level(float(c_pe), float(acc_words), float(sp_words))
-    energy = macs * EPA_MAC + sum(accesses[i] * epa[i]
-                                  for i in range(NLEVELS))
+    epa = cspec.epa(float(c_pe), cap_words)
+    energy = macs * cspec.spec.epa_mac + sum(accesses[i] * epa[i]
+                                             for i in range(n_levels))
     return OracleResult(latency=float(latency), energy=float(energy),
                         edp=float(latency * energy), accesses=accesses,
                         caps=caps, valid=True)
 
 
-def _invalid(reason: str) -> OracleResult:
+def _invalid(reason: str, n_levels: int = 4) -> OracleResult:
     return OracleResult(latency=float("inf"), energy=float("inf"),
-                        edp=float("inf"), accesses=np.full(NLEVELS, np.inf),
-                        caps=np.zeros((NLEVELS, 3)), valid=False,
+                        edp=float("inf"),
+                        accesses=np.full(n_levels, np.inf),
+                        caps=np.zeros((n_levels, 3)), valid=False,
                         reason=reason)
 
 
 def evaluate_workload(mappings: list[Mapping], layers, hw=None,
-                      quantize_dram: bool = True):
+                      quantize_dram: bool = True, spec=None):
     """Network EDP (Eq. 14): sum energies/latencies across layers (scaled
     by repeats), multiply the sums."""
     e_tot, l_tot = 0.0, 0.0
     results = []
     for mp, layer in zip(mappings, layers):
-        r = evaluate(mp, layer, hw=hw, quantize_dram=quantize_dram)
+        r = evaluate(mp, layer, hw=hw, quantize_dram=quantize_dram,
+                     spec=spec)
         results.append(r)
         if not r.valid:
             return float("inf"), results

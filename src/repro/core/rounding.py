@@ -10,7 +10,11 @@ the innermost to the outermost memory level."
 We make "nearest divisor subject to the constraint" precise by rounding
 each factor to the nearest divisor of the *remaining* quotient
 (dim / product-of-already-rounded-inner-factors), which guarantees the
-inferred DRAM factor (Sec. 5.3.3) is a positive integer.
+inferred backing-store factor (Sec. 5.3.3) is a positive integer.
+
+The site schedule (which (spatial|temporal, level) pairs may hold a
+factor of each dim, innermost first) is derived from the target's
+`CompiledSpec`; the default is Gemmini.
 """
 from __future__ import annotations
 
@@ -18,9 +22,10 @@ import functools
 
 import numpy as np
 
-from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, REG, SP
+from .arch import MAX_PE_DIM
+from .archspec import CompiledSpec, resolve_spec
 from .mapping import SPATIAL, TEMPORAL, Mapping
-from .problem import C, K, NDIMS, divisors
+from .problem import NDIMS, divisors
 
 
 @functools.lru_cache(maxsize=4096)
@@ -42,52 +47,61 @@ def _nearest_divisor(n: int, x: float, cap: int | None = None) -> int:
     return best
 
 
-# Sites receiving rounded factors, innermost -> outermost, per dim.
-# Register-level temporal tiling is only realizable for weight-irrelevant
-# dims (P, Q, N) on Gemmini WS (one weight register per PE).
-def _sites_for_dim(d: int) -> list[tuple[int, int]]:
-    from .problem import N, P, Q
-    sites: list[tuple[int, int]] = []
-    if d in (P, Q, N):
-        sites.append((TEMPORAL, REG))
-    if d == C:
-        sites.append((SPATIAL, ACC))
-    sites.append((TEMPORAL, ACC))
-    if d == K:
-        sites.append((SPATIAL, SP))
-    sites.append((TEMPORAL, SP))
-    return sites
+@functools.lru_cache(maxsize=None)
+def _sites_per_dim(cspec: CompiledSpec) -> tuple:
+    """Sites receiving rounded factors per dim, innermost -> outermost.
+    Level-0 temporal tiling is only realizable for the spec's level-0
+    dims (weight-irrelevant P/Q/N on Gemmini WS); a dim's spatial site
+    precedes its temporal factor at the same level."""
+    spatial = {(lvl, d) for (lvl, d) in cspec.spatial_sites}
+    per_dim = []
+    for d in range(NDIMS):
+        sites: list[tuple[int, int]] = []
+        for lvl in range(cspec.backing):
+            if (lvl, d) in spatial:
+                sites.append((SPATIAL, lvl))
+            if lvl > 0 or d in cspec.spec.level0_temporal_dims:
+                sites.append((TEMPORAL, lvl))
+        per_dim.append(tuple(sites))
+    return tuple(per_dim)
 
 
 def round_mapping(f: np.ndarray, order: np.ndarray, dims: np.ndarray,
-                  pe_cap: int = MAX_PE_DIM) -> Mapping:
-    """Round continuous factors (2,4,7) to the nearest valid integer
-    mapping; the DRAM temporal factor absorbs the remainder."""
+                  pe_cap: int = MAX_PE_DIM, spec=None) -> Mapping:
+    """Round continuous factors (2, n_levels, 7) to the nearest valid
+    integer mapping; the backing-store temporal factor absorbs the
+    remainder."""
+    cspec = resolve_spec(spec)
     f = np.asarray(f, dtype=float)
-    out = np.ones((2, NLEVELS, NDIMS), dtype=float)
+    out = np.ones((2, cspec.n_levels, NDIMS), dtype=float)
+    sites_per_dim = _sites_per_dim(cspec)
     for d in range(NDIMS):
         remaining = int(dims[d])
-        for (k, lvl) in _sites_for_dim(d):
+        for (k, lvl) in sites_per_dim[d]:
             cap = pe_cap if k == SPATIAL else None
             val = _nearest_divisor(remaining, float(f[k, lvl, d]), cap=cap)
             out[k, lvl, d] = val
             remaining //= val
-        out[TEMPORAL, DRAM, d] = remaining
+        out[TEMPORAL, cspec.backing, d] = remaining
     return Mapping(f=out, order=np.asarray(order, dtype=np.int64).copy())
 
 
 def round_all(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
-              pe_cap: int = MAX_PE_DIM) -> list[Mapping]:
-    """Round a whole workload: fs (L,2,4,7), orders (L,4), dims (L,7)."""
-    return [round_mapping(fs[i], orders[i], dims[i], pe_cap=pe_cap)
+              pe_cap: int = MAX_PE_DIM, spec=None) -> list[Mapping]:
+    """Round a whole workload: fs (L, 2, n_levels, 7), orders
+    (L, n_levels), dims (L, 7)."""
+    return [round_mapping(fs[i], orders[i], dims[i], pe_cap=pe_cap,
+                          spec=spec)
             for i in range(fs.shape[0])]
 
 
 def round_population(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
-                     pe_cap: int = MAX_PE_DIM) -> list[list[Mapping]]:
+                     pe_cap: int = MAX_PE_DIM,
+                     spec=None) -> list[list[Mapping]]:
     """Round a whole population of workload mappings on the host:
-    fs (P,L,2,4,7), orders (P,L,4), dims (L,7).  Returns one mapping
-    list per population member; the divisor cache is shared across
-    members (every member rounds against the same problem dims)."""
-    return [round_all(fs[p], orders[p], dims, pe_cap=pe_cap)
+    fs (P, L, 2, n_levels, 7), orders (P, L, n_levels), dims (L, 7).
+    Returns one mapping list per population member; the divisor cache is
+    shared across members (every member rounds against the same problem
+    dims)."""
+    return [round_all(fs[p], orders[p], dims, pe_cap=pe_cap, spec=spec)
             for p in range(fs.shape[0])]

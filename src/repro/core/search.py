@@ -1,18 +1,25 @@
 """DOSA one-loop gradient-descent co-search (paper Sec. 5).
 
 Search strategy (Table 5): temporal + spatial tiling factors by GD
-(Adam), spatial dataflow fixed to Gemmini weight-stationary C|K, tensor
-bypass fixed (Table 4), loop ordering by exhaustive enumeration —
-either *iterative* (re-selected after every rounding, Sec. 5.2.1) or
-*softmax-weighted in the loss* (Sec. 5.2.2, Eqs. 15-17).
+(Adam), the spatial dataflow and tensor bypass fixed by the target's
+`ArchSpec` (Gemmini weight-stationary C|K by default, Table 4), loop
+ordering by exhaustive enumeration — either *iterative* (re-selected
+after every rounding, Sec. 5.2.1) or *softmax-weighted in the loss*
+(Sec. 5.2.2, Eqs. 15-17).
+
+The engine is architecture-generic: `SearchConfig.spec` selects any
+`ArchSpec` (default Gemmini), and every stage — loss construction,
+free-parameter masks, rounding sites, ordering tables, hardware
+inference, CoSA seeding and oracle evaluation — reads the compiled
+spec's tables.  One engine, many targets (Sec. 6.5's modularity claim).
 
 Protocol details implemented from the paper:
 * start points: random hardware + CoSA-seeded mappings (Sec. 5.1);
 * start-point rejection at 10x the best seen start (Sec. 5.3.1);
 * rounding to nearest-divisor valid mappings every `round_every` steps,
   innermost->outermost (Sec. 5.3.2);
-* DRAM factors inferred, validity penalty sum max(1-f, 0) (Sec. 5.3.3,
-  Eq. 18);
+* backing-store factors inferred, validity penalty sum max(1-f, 0)
+  (Sec. 5.3.3, Eq. 18);
 * EDP of the full network as the loss (Eq. 14) — we descend log(EDP),
   a monotone rescaling with identical minimizers that keeps fp32
   gradients well-conditioned;
@@ -25,14 +32,15 @@ Two execution engines share the protocol:
 * the *sequential* reference driver (``dosa_search(..., population=None)``)
   runs each start point's Adam descent as a Python loop of jitted steps;
 * the *batched* engine (``dosa_search(..., population=P)``) carries a
-  ``(P, L, 2, 4, 7)`` population of log-factor tensors and executes each
-  GD segment between roundings as one ``jax.lax.scan`` whose body is the
-  Adam update of a ``jax.vmap``-ed loss — one device program for the
-  whole population instead of ``P x steps`` tiny dispatches.  Rounding,
-  ordering re-selection and oracle evaluation happen population-wide on
-  the host between segments, and per-start sample accounting keeps
-  ``SearchResult.history`` / ``n_evals`` comparable to the sequential
-  path (identical totals; interleaved order).
+  ``(P, L, 2, n_levels, 7)`` population of log-factor tensors and
+  executes each GD segment between roundings as one ``jax.lax.scan``
+  whose body is the Adam update of a ``jax.vmap``-ed loss — one device
+  program for the whole population instead of ``P x steps`` tiny
+  dispatches.  Rounding, ordering re-selection and oracle evaluation
+  happen population-wide on the host between segments, and per-start
+  sample accounting keeps ``SearchResult.history`` / ``n_evals``
+  comparable to the sequential path (identical totals; interleaved
+  order).
 """
 from __future__ import annotations
 
@@ -44,56 +52,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .arch import ACC, DRAM, MAX_PE_DIM, NLEVELS, SP, GemminiHW
+from .arch import ACC, SP, WORD_BYTES, GemminiHW
+from .archspec import (ArchSpec, CompiledSpec, GEMMINI_SPEC, HWConfig,
+                       compile_spec, resolve_spec)
 from .cosa import cosa_map_workload
-from .hw_infer import minimal_hw, random_hw
+from .hw_infer import minimal_hw_for, random_hw_for
 from .mapping import SPATIAL, TEMPORAL, Mapping, stack_mappings
-from .model import (HWParams, capacity_penalty, infer_hw,
-                    infer_hw_population, layer_el_all_orderings,
-                    layer_el_all_orderings_population, ordering_combos,
-                    validity_penalty, workload_eval)
+from .model import (SpecHW, capacities, capacity_penalty_spec,
+                    infer_hw_spec, infer_hw_population_spec,
+                    layer_el_all_orderings_spec,
+                    layer_el_all_orderings_population_spec,
+                    validity_penalty, workload_eval_spec,
+                    _spec_hw_from_params)
 from .oracle import evaluate_workload
-from .problem import C, K, NDIMS, Workload
+from .problem import Workload
 from .rounding import round_all, round_population
 
-# Free optimization sites: temporal ACC/SP for all dims, temporal REG for
-# weight-irrelevant dims only (one weight register per PE on Gemmini WS),
-# plus the two Gemmini spatial factors.  DRAM temporal is inferred.
-from .problem import N as _N, P as _P, Q as _Q  # noqa: E402
-
-FREE_MASK = np.zeros((2, NLEVELS, NDIMS), dtype=bool)
-FREE_MASK[TEMPORAL, 1:DRAM, :] = True
-FREE_MASK[TEMPORAL, 0, [_P, _Q, _N]] = True
-FREE_MASK[SPATIAL, ACC, C] = True
-FREE_MASK[SPATIAL, SP, K] = True
-_FREE_MASK_J = jnp.asarray(FREE_MASK)
+# Free optimization sites of the default (Gemmini) target: temporal
+# ACC/SP for all dims, temporal REG for weight-irrelevant dims only (one
+# weight register per PE on Gemmini WS), plus the two Gemmini spatial
+# factors.  The backing-store temporal factor is inferred.  Generic
+# targets read `compile_spec(spec).free_mask` instead.
+FREE_MASK = compile_spec(GEMMINI_SPEC).free_mask
 
 _ADAM_B1, _ADAM_B2, _ADAM_EPS = 0.9, 0.999, 1e-8
 
 
-def build_f(theta: jnp.ndarray, dims: jnp.ndarray) -> jnp.ndarray:
-    """theta (L,2,4,7) log-factors -> full factor tensor with inferred
-    DRAM temporal factors (Sec. 5.3.3).  dims: (L,7) float."""
-    f = jnp.where(_FREE_MASK_J, jnp.exp(theta), 1.0)
-    inner = jnp.prod(f, axis=(1, 2)) / f[:, TEMPORAL, DRAM, :]
-    f = f.at[:, TEMPORAL, DRAM, :].set(dims / inner)
+def build_f(theta: jnp.ndarray, dims: jnp.ndarray,
+            free_mask=None) -> jnp.ndarray:
+    """theta (L, 2, n_levels, 7) log-factors -> full factor tensor with
+    inferred backing-store temporal factors (Sec. 5.3.3).
+    dims: (L, 7) float."""
+    mask = compile_spec(GEMMINI_SPEC).free_mask_j if free_mask is None \
+        else free_mask
+    f = jnp.where(mask, jnp.exp(theta), 1.0)
+    inner = jnp.prod(f, axis=(1, 2)) / f[:, TEMPORAL, -1, :]
+    f = f.at[:, TEMPORAL, -1, :].set(dims / inner)
     return f
 
 
-def theta_from_mappings(mappings: list[Mapping]) -> np.ndarray:
+def theta_from_mappings(mappings: list[Mapping],
+                        free_mask: np.ndarray | None = None) -> np.ndarray:
+    mask = FREE_MASK if free_mask is None else free_mask
     fs, _ = stack_mappings(mappings)
     theta = np.zeros_like(fs)
-    np.log(np.maximum(fs, 1.0), out=theta, where=FREE_MASK[None])
+    np.log(np.maximum(fs, 1.0), out=theta, where=mask[None])
     return theta
 
 
-def theta_from_population(population: list[list[Mapping]]) -> np.ndarray:
-    """(P, L, 2, 4, 7) log-factors for a population of workload mappings."""
-    return np.stack([theta_from_mappings(ms) for ms in population])
+def theta_from_population(population: list[list[Mapping]],
+                          free_mask: np.ndarray | None = None) -> np.ndarray:
+    """(P, L, 2, n_levels, 7) log-factors for a population of workload
+    mappings."""
+    return np.stack([theta_from_mappings(ms, free_mask)
+                     for ms in population])
 
 
 def orders_from_population(population: list[list[Mapping]]) -> np.ndarray:
-    """(P, L, 4) per-level ordering choices for a population."""
+    """(P, L, n_levels) per-level ordering choices for a population."""
     return np.stack([np.stack([m.order for m in ms]) for ms in population])
 
 
@@ -106,7 +122,8 @@ class SearchConfig:
     penalty_weight: float = 10.0
     ordering_mode: str = "iterative"   # "none" | "iterative" | "softmax"
     softmax_temp: float = 10.0
-    fixed_hw: GemminiHW | None = None  # freeze PE dims (Sec. 6.5 mode)
+    spec: ArchSpec | None = None       # target architecture (None: Gemmini)
+    fixed_hw: GemminiHW | HWConfig | None = None  # freeze PE dims (Sec. 6.5)
     fix_pe_only: bool = True           # Sec. 6.5 frees buffer sizes
     reject_factor: float = 10.0
     max_reject_tries: int = 10
@@ -120,41 +137,62 @@ class SearchConfig:
 class SearchResult:
     best_edp: float
     best_mappings: list[Mapping]
-    best_hw: GemminiHW
+    best_hw: GemminiHW | HWConfig
     history: list[tuple[int, float]]   # (cumulative evals, best oracle EDP)
     n_evals: int
     start_edps: list[float]
+
+
+def _cspec(cfg: SearchConfig) -> CompiledSpec:
+    return resolve_spec(cfg.spec)
+
+
+def _pe_cap(cfg: SearchConfig, cspec: CompiledSpec) -> float:
+    return float(cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
+                 else cspec.spec.max_pe_dim)
+
+
+def _fixed_spec_hw(cfg: SearchConfig, cspec: CompiledSpec) -> SpecHW | None:
+    """The frozen SpecHW when the whole hardware point is fixed
+    (Sec. 6.5 buffer-and-mapping-frozen mode), else None."""
+    if cfg.fixed_hw is None or cfg.fix_pe_only:
+        return None
+    c_pe, cap_words = cspec.hw_words(cfg.fixed_hw)
+    return SpecHW(c_pe=jnp.asarray(c_pe), cap_words=jnp.asarray(cap_words))
 
 
 # ---------------------------------------------------------------------------
 # Loss functions
 # ---------------------------------------------------------------------------
 
-def _spatial_cap_penalty(f: jnp.ndarray, pe_cap: float) -> jnp.ndarray:
-    s = jnp.stack([f[:, SPATIAL, ACC, C], f[:, SPATIAL, SP, K]])
+def _spatial_cap_penalty(f: jnp.ndarray, pe_cap: float,
+                         sites) -> jnp.ndarray:
+    if not sites:
+        return jnp.asarray(0.0)
+    s = jnp.stack([f[:, SPATIAL, lvl, d] for (lvl, d) in sites])
     return jnp.sum(jnp.maximum(s / pe_cap - 1.0, 0.0))
 
 
 def _make_loss_fn(workload: Workload, cfg: SearchConfig):
-    """Raw (unjitted) per-start loss `(theta (L,2,4,7), orders (L,4)) ->
-    scalar`, plus the workload constant arrays.  Both engines build on
-    this: the sequential driver jits its value_and_grad directly, the
-    batched driver lifts it one population axis higher with vmap."""
+    """Raw (unjitted) per-start loss `(theta (L, 2, n_levels, 7), orders
+    (L, n_levels)) -> scalar`, plus the workload constant arrays.  Both
+    engines build on this: the sequential driver jits its
+    value_and_grad directly, the batched driver lifts it one population
+    axis higher with vmap."""
+    cspec = _cspec(cfg)
     dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
     strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
     repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
-    fixed = cfg.fixed_hw
-    pe_cap = float(fixed.pe_dim if fixed is not None else MAX_PE_DIM)
-    hw_fixed = None
-    if fixed is not None and not cfg.fix_pe_only:
-        hw_fixed = HWParams(c_pe=jnp.asarray(float(fixed.c_pe)),
-                            acc_words=jnp.asarray(float(fixed.acc_words)),
-                            sp_words=jnp.asarray(float(fixed.sp_words)))
+    pe_cap = _pe_cap(cfg, cspec)
+    hw_fixed = _fixed_spec_hw(cfg, cspec)
+    free_mask_j = cspec.free_mask_j
+    if cfg.surrogate is not None and cspec.spec is not GEMMINI_SPEC:
+        raise ValueError("the learned latency surrogate is trained on "
+                         "Gemmini features; spec targets run analytical")
 
-    def _surrogate_latency(theta, f, orders, hw, lat_analytical):
+    def _surrogate_latency(theta, f, orders, hw: SpecHW, lat_analytical):
         """Per-layer latency through the learned model (differentiable:
         features are the log-factors = theta at the free sites)."""
-        from .arch import WORD_BYTES
         from .surrogate import mlp_apply
         sur = cfg.surrogate
         L = f.shape[0]
@@ -162,8 +200,8 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
         logdims = jnp.log(dims)                               # (L, 7)
         oh = jax.nn.one_hot(orders[:, 1:4], 3).reshape(L, 9)
         pe_dim = jnp.sqrt(hw.c_pe)
-        acc_kb = hw.acc_words * WORD_BYTES[ACC] / 1024.0
-        sp_kb = hw.sp_words * WORD_BYTES[SP] / 1024.0
+        acc_kb = hw.cap_words[ACC] * WORD_BYTES[ACC] / 1024.0
+        sp_kb = hw.cap_words[SP] * WORD_BYTES[SP] / 1024.0
         hwf = jnp.stack([jnp.log(pe_dim), jnp.log(acc_kb),
                          jnp.log(sp_kb)])
         hwf = jnp.broadcast_to(hwf, (L, 3))
@@ -177,8 +215,8 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
         return jnp.exp(jnp.clip(out, 0.0, DIRECT_CLIP))
 
     def edp_fixed_orders(f, orders, theta=None):
-        edp, (en, lat, hw) = workload_eval(f, orders, strides, repeats,
-                                           hw=hw_fixed)
+        edp, (en, lat, hw) = workload_eval_spec(cspec, f, orders, strides,
+                                                repeats, hw=hw_fixed)
         if cfg.surrogate is not None and theta is not None:
             lat_a = lat / repeats
             lat_s = _surrogate_latency(theta, f, orders, hw, lat_a)
@@ -186,24 +224,42 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
         return edp, hw
 
     def edp_softmax(f, orders):
-        hw = infer_hw(f, strides) if hw_fixed is None else hw_fixed
-        e, l = jax.vmap(lambda fl, s: layer_el_all_orderings(
-            fl, s, hw.c_pe, hw.acc_words, hw.sp_words))(f, strides)
-        inv = jnp.min(e * l, axis=1, keepdims=True) / (e * l)   # (L,27)
+        hw = infer_hw_spec(cspec, f, strides) if hw_fixed is None \
+            else hw_fixed
+        e, l = jax.vmap(lambda fl, s: layer_el_all_orderings_spec(
+            cspec, fl, s, hw.c_pe, hw.cap_words))(f, strides)
+        inv = jnp.min(e * l, axis=1, keepdims=True) / (e * l)   # (L,n_c)
         w = jax.nn.softmax(cfg.softmax_temp * inv, axis=1)       # Eq. 16
         e_l = jnp.sum(w * e, axis=1) * repeats
         l_l = jnp.sum(w * l, axis=1) * repeats
         return jnp.sum(e_l) * jnp.sum(l_l), hw                   # Eq. 17
 
+    def _fixed_silicon_penalty(f):
+        """Overflow of fixed-capacity levels (e.g. TPU VMEM) — active
+        even in mapping-first mode, where no searched buffer grows to
+        absorb the tile."""
+        if not cspec.fixed_capacity:
+            return 0.0
+        caps = jax.vmap(capacities)(f, strides)
+        pen = 0.0
+        for (i, words) in cspec.fixed_capacity:
+            req = sum(caps[:, i, t] for t in range(3)
+                      if cspec.b_matrix[i, t])
+            pen = pen + jnp.sum(jnp.maximum(req / words - 1.0, 0.0))
+        return pen
+
     def loss(theta, orders):
-        f = build_f(theta, dims)
+        f = build_f(theta, dims, free_mask_j)
         if cfg.ordering_mode == "softmax" and cfg.surrogate is None:
             edp, _ = edp_softmax(f, orders)
         else:
             edp, _ = edp_fixed_orders(f, orders, theta=theta)
-        pen = validity_penalty(f) + _spatial_cap_penalty(f, pe_cap)
+        pen = validity_penalty(f) \
+            + _spatial_cap_penalty(f, pe_cap, cspec.spatial_sites)
         if hw_fixed is not None:
-            pen = pen + capacity_penalty(f, strides, hw_fixed)
+            pen = pen + capacity_penalty_spec(cspec, f, strides, hw_fixed)
+        else:
+            pen = pen + _fixed_silicon_penalty(f)
         return jnp.log(edp) + cfg.penalty_weight * pen
 
     return loss, dims, strides, repeats
@@ -222,8 +278,9 @@ _ENGINE_CACHE_MAX = 16
 
 
 def _engine_key(workload: Workload, cfg: SearchConfig, kind: str):
-    return (kind, workload, cfg.lr, cfg.penalty_weight, cfg.ordering_mode,
-            cfg.softmax_temp, cfg.fixed_hw, cfg.fix_pe_only,
+    return (kind, workload, cfg.spec, cfg.lr, cfg.penalty_weight,
+            cfg.ordering_mode, cfg.softmax_temp, cfg.fixed_hw,
+            cfg.fix_pe_only,
             id(cfg.surrogate) if cfg.surrogate is not None else None)
 
 
@@ -260,10 +317,11 @@ def adam_step(theta, grad, m, v, t, lr: float, b1=_ADAM_B1, b2=_ADAM_B2,
 
 def make_population_runner(workload: Workload, cfg: SearchConfig):
     """Build the batched GD-segment executor: one jitted function that
-    advances a whole (P, L, 2, 4, 7) population by `n_steps` Adam steps
-    as a single `jax.lax.scan` over the vmapped loss gradient.  Fresh
-    momentum per segment, matching the sequential driver's reset after
-    every rounding.  Cached per (workload, cfg) like `make_loss`."""
+    advances a whole (P, L, 2, n_levels, 7) population by `n_steps`
+    Adam steps as a single `jax.lax.scan` over the vmapped loss
+    gradient.  Fresh momentum per segment, matching the sequential
+    driver's reset after every rounding.  Cached per (workload, cfg)
+    like `make_loss`."""
     def build():
         loss, dims, strides, repeats = _make_loss_fn(workload, cfg)
         pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0))
@@ -298,15 +356,15 @@ def _segment_lengths(steps: int, round_every: int) -> list[int]:
 
 
 # ---------------------------------------------------------------------------
-# Loop-ordering selection (Sec. 5.2.1): coordinate descent over the 27
-# per-layer combos against overall network EDP (Eq. 14).
+# Loop-ordering selection (Sec. 5.2.1): coordinate descent over the
+# 3**(n_levels-1) per-layer combos against network EDP (Eq. 14).
 # ---------------------------------------------------------------------------
 
 def _coordinate_descent_orderings(e: np.ndarray, l: np.ndarray,
                                   n_passes: int) -> np.ndarray:
     """Host-side coordinate descent over per-layer ordering choices.
-    e, l: (L, 27) repeat-scaled energies/latencies.  Returns (L,) combo
-    indices minimizing (sum e) * (sum l)."""
+    e, l: (L, n_combos) repeat-scaled energies/latencies.  Returns (L,)
+    combo indices minimizing (sum e) * (sum l)."""
     L = e.shape[0]
     choice = np.zeros(L, dtype=np.int64)
     for _ in range(n_passes):
@@ -322,29 +380,39 @@ def _coordinate_descent_orderings(e: np.ndarray, l: np.ndarray,
     return choice
 
 
-def select_orderings(fs: np.ndarray, strides: np.ndarray,
-                     repeats: np.ndarray, hw: HWParams,
-                     n_passes: int = 2) -> np.ndarray:
-    combos = ordering_combos()                       # (27, 4)
-    e, l = jax.vmap(lambda f, s: layer_el_all_orderings(
-        f, s, hw.c_pe, hw.acc_words, hw.sp_words))(
+def select_orderings_spec(cspec: CompiledSpec, fs: np.ndarray,
+                          strides: np.ndarray, repeats: np.ndarray,
+                          hw: SpecHW, n_passes: int = 2) -> np.ndarray:
+    combos = cspec.combos                            # (n_combos, n_levels)
+    e, l = jax.vmap(lambda f, s: layer_el_all_orderings_spec(
+        cspec, f, s, hw.c_pe, hw.cap_words))(
         jnp.asarray(fs), jnp.asarray(strides))
-    e = np.asarray(e) * repeats[:, None]             # (L, 27)
+    e = np.asarray(e) * repeats[:, None]             # (L, n_combos)
     l = np.asarray(l) * repeats[:, None]
     choice = _coordinate_descent_orderings(e, l, n_passes)
-    return combos[choice]                            # (L, 4)
+    return combos[choice]                            # (L, n_levels)
 
 
-def select_orderings_population(fs_pop: np.ndarray, strides: np.ndarray,
-                                repeats: np.ndarray, hws: HWParams,
-                                n_passes: int = 2) -> np.ndarray:
+def select_orderings(fs: np.ndarray, strides: np.ndarray,
+                     repeats: np.ndarray, hw, n_passes: int = 2) -> np.ndarray:
+    """Legacy Gemmini entry point (`hw`: model.HWParams)."""
+    return select_orderings_spec(compile_spec(GEMMINI_SPEC), fs, strides,
+                                 repeats, _spec_hw_from_params(hw),
+                                 n_passes)
+
+
+def select_orderings_population_spec(cspec: CompiledSpec,
+                                     fs_pop: np.ndarray, strides: np.ndarray,
+                                     repeats: np.ndarray, hws: SpecHW,
+                                     n_passes: int = 2) -> np.ndarray:
     """Population-wide iterative ordering re-selection: one batched
-    device computation of all (P, L, 27) energy/latency tables, then
-    per-member host coordinate descent.  hws carries (P,) leaves (one
-    inferred/fixed hardware per population member).  Returns (P, L, 4)."""
-    combos = ordering_combos()
-    e, l = layer_el_all_orderings_population(
-        jnp.asarray(fs_pop), jnp.asarray(strides), hws)   # (P, L, 27)
+    device computation of all (P, L, n_combos) energy/latency tables,
+    then per-member host coordinate descent.  hws carries (P,)/(P,
+    n_levels) leaves (one inferred/fixed hardware per member).  Returns
+    (P, L, n_levels)."""
+    combos = cspec.combos
+    e, l = layer_el_all_orderings_population_spec(
+        cspec, jnp.asarray(fs_pop), jnp.asarray(strides), hws)
     e = np.asarray(e) * repeats[None, :, None]
     l = np.asarray(l) * repeats[None, :, None]
     return np.stack([
@@ -352,21 +420,36 @@ def select_orderings_population(fs_pop: np.ndarray, strides: np.ndarray,
         for p in range(e.shape[0])])
 
 
+def select_orderings_population(fs_pop: np.ndarray, strides: np.ndarray,
+                                repeats: np.ndarray, hws,
+                                n_passes: int = 2) -> np.ndarray:
+    """Legacy Gemmini entry point (`hws`: model.HWParams, (P,) leaves)."""
+    shw = SpecHW(c_pe=jnp.asarray(hws.c_pe),
+                 cap_words=jnp.stack([
+                     jnp.full_like(jnp.asarray(hws.acc_words), jnp.inf),
+                     jnp.asarray(hws.acc_words),
+                     jnp.asarray(hws.sp_words),
+                     jnp.full_like(jnp.asarray(hws.acc_words), jnp.inf)],
+                     axis=-1))
+    return select_orderings_population_spec(
+        compile_spec(GEMMINI_SPEC), fs_pop, strides, repeats, shw, n_passes)
+
+
 # ---------------------------------------------------------------------------
 # Oracle accounting shared by both engines
 # ---------------------------------------------------------------------------
 
-def _oracle_edp(mappings, workload, cfg) -> float:
+def _oracle_edp(mappings, workload, cfg, cspec: CompiledSpec) -> float:
     if cfg.latency_model is not None:
         return cfg.latency_model(mappings, workload)
     hw = cfg.fixed_hw
     if hw is not None and cfg.fix_pe_only:
         # Sec. 6.5 protocol: PE dims frozen, buffers re-derived minimally.
-        derived = minimal_hw(mappings, list(workload.layers))
-        hw = GemminiHW(pe_dim=cfg.fixed_hw.pe_dim, acc_kb=derived.acc_kb,
-                       sp_kb=derived.sp_kb)
+        derived = minimal_hw_for(cspec, mappings, list(workload.layers))
+        hw = dataclasses.replace(derived, pe_dim=cfg.fixed_hw.pe_dim)
     edp, _ = evaluate_workload(mappings, workload.layers,
-                               hw=hw if hw is not None else None)
+                               hw=hw if hw is not None else None,
+                               spec=cspec)
     return float(edp)
 
 
@@ -375,12 +458,17 @@ class _Recorder:
     every differentiable-model step and every oracle evaluation counts
     as one sample (Sec. 6.3)."""
 
-    def __init__(self, workload: Workload, cfg: SearchConfig):
-        self.workload, self.cfg = workload, cfg
+    def __init__(self, workload: Workload, cfg: SearchConfig,
+                 cspec: CompiledSpec):
+        self.workload, self.cfg, self.cspec = workload, cfg, cspec
         self.evals = 0
+        if cspec.spec is GEMMINI_SPEC:
+            hw0 = GemminiHW(1, 1.0, 1.0)
+        else:
+            hw0 = HWConfig(1, (1.0,) * len(cspec.searched_levels))
         self.best = SearchResult(best_edp=float("inf"), best_mappings=[],
-                                 best_hw=GemminiHW(1, 1.0, 1.0), history=[],
-                                 n_evals=0, start_edps=[])
+                                 best_hw=hw0, history=[], n_evals=0,
+                                 start_edps=[])
 
     def count(self, n: int = 1) -> None:
         self.evals += n
@@ -388,15 +476,15 @@ class _Recorder:
     def record(self, mappings: list[Mapping]) -> float:
         """Oracle-evaluate a rounded candidate, update the running best."""
         cfg, best = self.cfg, self.best
-        edp = _oracle_edp(mappings, self.workload, cfg)
+        edp = _oracle_edp(mappings, self.workload, cfg, self.cspec)
         self.evals += 1
         if edp < best.best_edp:
             best.best_edp = edp
             best.best_mappings = [m.copy() for m in mappings]
-            hw = minimal_hw(mappings, list(self.workload.layers))
+            hw = minimal_hw_for(self.cspec, mappings,
+                                list(self.workload.layers))
             if cfg.fixed_hw is not None and cfg.fix_pe_only:
-                hw = GemminiHW(pe_dim=cfg.fixed_hw.pe_dim,
-                               acc_kb=hw.acc_kb, sp_kb=hw.sp_kb)
+                hw = dataclasses.replace(hw, pe_dim=cfg.fixed_hw.pe_dim)
             elif cfg.fixed_hw is not None:
                 hw = cfg.fixed_hw
             best.best_hw = hw
@@ -418,11 +506,13 @@ def _generate_start_point(workload: Workload, cfg: SearchConfig,
     """One random-hardware + CoSA-seeded start point, rejected (up to
     `max_reject_tries` times) while its EDP exceeds `reject_factor` x the
     best start seen so far.  Returns (mappings, edp0, best_start_edp)."""
+    cspec = rec.cspec
     mappings = None
     for _ in range(cfg.max_reject_tries):
-        hw0 = cfg.fixed_hw if cfg.fixed_hw is not None else random_hw(rng)
-        cand = cosa_map_workload(list(workload.layers), hw0)
-        edp0 = _oracle_edp(cand, workload, cfg)
+        hw0 = cfg.fixed_hw if cfg.fixed_hw is not None \
+            else random_hw_for(cspec, rng)
+        cand = cosa_map_workload(list(workload.layers), hw0, spec=cspec)
+        edp0 = _oracle_edp(cand, workload, cfg, cspec)
         rec.count()
         if edp0 <= cfg.reject_factor * best_start_edp:
             mappings = cand
@@ -442,7 +532,7 @@ def generate_start_points(workload: Workload, cfg: SearchConfig,
     helper, so the RNG stream (and therefore the start points) are
     identical across engines for a given seed."""
     rng = np.random.default_rng(cfg.seed) if rng is None else rng
-    rec = _Recorder(workload, cfg)
+    rec = _Recorder(workload, cfg, _cspec(cfg))
     population, best_start_edp = [], float("inf")
     for _ in range(cfg.n_start_points):
         mappings, edp0, best_start_edp = _generate_start_point(
@@ -469,15 +559,29 @@ def dosa_search(workload: Workload, cfg: SearchConfig,
     return _dosa_search_sequential(workload, cfg)
 
 
+def _ordering_hw(cfg: SearchConfig, cspec: CompiledSpec,
+                 fs: np.ndarray, strides: np.ndarray) -> SpecHW:
+    """Hardware point against which rounded candidates re-select their
+    loop orderings: the frozen config when fully fixed, else inferred
+    minimal hardware."""
+    fixed = _fixed_spec_hw(cfg, cspec)
+    if fixed is not None:
+        return fixed
+    return infer_hw_spec(cspec, jnp.asarray(fs), jnp.asarray(strides))
+
+
 def _dosa_search_sequential(workload: Workload,
                             cfg: SearchConfig) -> SearchResult:
+    cspec = _cspec(cfg)
     rng = np.random.default_rng(cfg.seed)
     loss_grad, dims_j, strides_j, repeats_j = make_loss(workload, cfg)
     dims = workload.dims_array()
     strides = workload.strides_array().astype(float)
     repeats = workload.repeats_array().astype(float)
+    free_mask_j = cspec.free_mask_j
+    pe_cap = int(_pe_cap(cfg, cspec))
 
-    rec = _Recorder(workload, cfg)
+    rec = _Recorder(workload, cfg, cspec)
     best_start_edp = float("inf")
 
     for sp_i in range(cfg.n_start_points):
@@ -487,7 +591,8 @@ def _dosa_search_sequential(workload: Workload,
         rec.best.start_edps.append(edp0)
         rec.record(mappings)
 
-        theta = jnp.asarray(theta_from_mappings(mappings), dtype=jnp.float32)
+        theta = jnp.asarray(theta_from_mappings(mappings, cspec.free_mask),
+                            dtype=jnp.float32)
         orders = jnp.asarray(np.stack([m.order for m in mappings]))
         m_t = jnp.zeros_like(theta)
         v_t = jnp.zeros_like(theta)
@@ -500,30 +605,22 @@ def _dosa_search_sequential(workload: Workload,
                                         lr=cfg.lr)
             rec.count()
             if step % cfg.round_every == 0 or step == cfg.steps:
-                f_cont = np.asarray(build_f(theta, dims_j))
-                pe_cap = (cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
-                          else MAX_PE_DIM)
+                f_cont = np.asarray(build_f(theta, dims_j, free_mask_j))
                 rounded = round_all(f_cont, np.asarray(orders), dims,
-                                    pe_cap=pe_cap)
+                                    pe_cap=pe_cap, spec=cspec)
                 if cfg.ordering_mode in ("iterative", "softmax"):
                     fs_r, _ = stack_mappings(rounded)
-                    if cfg.fixed_hw is not None and not cfg.fix_pe_only:
-                        hwp = HWParams(
-                            c_pe=jnp.asarray(float(cfg.fixed_hw.c_pe)),
-                            acc_words=jnp.asarray(float(cfg.fixed_hw.acc_words)),
-                            sp_words=jnp.asarray(float(cfg.fixed_hw.sp_words)))
-                    else:
-                        hwp = infer_hw(jnp.asarray(fs_r),
-                                       jnp.asarray(strides))
-                    new_orders = select_orderings(fs_r, strides, repeats,
-                                                  hwp)
+                    hwp = _ordering_hw(cfg, cspec, fs_r, strides)
+                    new_orders = select_orderings_spec(cspec, fs_r, strides,
+                                                       repeats, hwp)
                     for mp, o in zip(rounded, new_orders):
                         mp.order = o
                     orders = jnp.asarray(new_orders)
                 rec.record(rounded)
                 # Continue GD from the rounded point, fresh momentum.
-                theta = jnp.asarray(theta_from_mappings(rounded),
-                                    dtype=jnp.float32)
+                theta = jnp.asarray(
+                    theta_from_mappings(rounded, cspec.free_mask),
+                    dtype=jnp.float32)
                 m_t = jnp.zeros_like(theta)
                 v_t = jnp.zeros_like(theta)
                 t = 0
@@ -537,16 +634,17 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
     point in a chunk runs as a single scanned, vmapped device program;
     the host only intervenes at rounding points (Sec. 5.3.2), where the
     whole chunk is rounded, re-ordered and oracle-evaluated at once."""
+    cspec = _cspec(cfg)
     rng = np.random.default_rng(cfg.seed)
     run_segment, dims_j, strides_j, repeats_j = \
         make_population_runner(workload, cfg)
     dims = workload.dims_array()
     strides = workload.strides_array().astype(float)
     repeats = workload.repeats_array().astype(float)
-    pe_cap = (cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
-              else MAX_PE_DIM)
+    free_mask_j = cspec.free_mask_j
+    pe_cap = int(_pe_cap(cfg, cspec))
 
-    rec = _Recorder(workload, cfg)
+    rec = _Recorder(workload, cfg, cspec)
 
     # ---- population-wide start generation with rejection (Sec. 5.3.1).
     # Start points consume the RNG in the same order as the sequential
@@ -559,14 +657,7 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
         starts.append(mappings)
 
     segments = _segment_lengths(cfg.steps, cfg.round_every)
-
-    if cfg.fixed_hw is not None and not cfg.fix_pe_only:
-        hw_fixed = HWParams(
-            c_pe=jnp.asarray(float(cfg.fixed_hw.c_pe)),
-            acc_words=jnp.asarray(float(cfg.fixed_hw.acc_words)),
-            sp_words=jnp.asarray(float(cfg.fixed_hw.sp_words)))
-    else:
-        hw_fixed = None
+    hw_fixed = _fixed_spec_hw(cfg, cspec)
 
     for lo in range(0, len(starts), population):
         chunk = starts[lo:lo + population]
@@ -574,36 +665,39 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
         for mappings in chunk:
             rec.record(mappings)
 
-        theta = jnp.asarray(theta_from_population(chunk), dtype=jnp.float32)
+        theta = jnp.asarray(theta_from_population(chunk, cspec.free_mask),
+                            dtype=jnp.float32)
         orders = jnp.asarray(orders_from_population(chunk))
 
         for n_steps in segments:
             theta = run_segment(theta, orders, n_steps)
             rec.count(n_steps * P)   # one sample per GD step per start
 
-            f_cont = np.asarray(
-                jax.vmap(build_f, in_axes=(0, None))(theta, dims_j))
+            f_cont = np.asarray(jax.vmap(
+                lambda th: build_f(th, dims_j, free_mask_j))(theta))
             rounded_pop = round_population(f_cont, np.asarray(orders), dims,
-                                           pe_cap=pe_cap)
+                                           pe_cap=pe_cap, spec=cspec)
             if cfg.ordering_mode in ("iterative", "softmax"):
                 fs_pop = np.stack(
                     [stack_mappings(ms)[0] for ms in rounded_pop])
                 if hw_fixed is not None:
                     hws = jax.tree_util.tree_map(
-                        lambda x: jnp.broadcast_to(x, (P,)), hw_fixed)
+                        lambda x: jnp.broadcast_to(x, (P,) + jnp.shape(x)),
+                        hw_fixed)
                 else:
-                    hws = infer_hw_population(jnp.asarray(fs_pop),
-                                              jnp.asarray(strides))
-                new_orders = select_orderings_population(fs_pop, strides,
-                                                         repeats, hws)
+                    hws = infer_hw_population_spec(
+                        cspec, jnp.asarray(fs_pop), jnp.asarray(strides))
+                new_orders = select_orderings_population_spec(
+                    cspec, fs_pop, strides, repeats, hws)
                 for ms, no in zip(rounded_pop, new_orders):
                     for mp, o in zip(ms, no):
                         mp.order = o
             for ms in rounded_pop:
                 rec.record(ms)
             # Continue GD from the rounded points, fresh momentum.
-            theta = jnp.asarray(theta_from_population(rounded_pop),
-                                dtype=jnp.float32)
+            theta = jnp.asarray(
+                theta_from_population(rounded_pop, cspec.free_mask),
+                dtype=jnp.float32)
             orders = jnp.asarray(orders_from_population(rounded_pop))
 
     return rec.finish()

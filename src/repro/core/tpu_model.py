@@ -1,28 +1,30 @@
 """DOSA's differentiable model retargeted at the TPU v5e memory
 hierarchy (DESIGN.md Sec. 5 — the hardware adaptation).
 
-Gemmini's hierarchy (regs <- accumulator/scratchpad <- DRAM, all sizes
-*searched*) becomes HBM -> VMEM -> VREG/MXU with *fixed* capacities:
-the paper's mapping-first capacity inference (Eqs. 2-5) inverts into a
-differentiable feasibility constraint (tile footprint <= VMEM), and the
-roofline latency (Eq. 12) gains a collective term for ICI:
+Since the ArchSpec refactor this module holds **no traffic or capacity
+math of its own**: the TPU v5e is `archspec.TPU_V5E_SPEC` (HBM -> VMEM
+-> VREG/MXU with *fixed* capacities), and `matmul_latency` /
+`vmem_footprint` below are thin adapters that express a Pallas-style
+matmul tile schedule (bm, bn, bk) as a mapping tensor for the shared
+differentiable core in `model.py` — the same `capacities` (Eqs. 2-5)
+and `traffic` (Eqs. 6-11) code that models Gemmini.
 
-    latency = max(compute, hbm, ici)
+What stays TPU-specific here:
 
-For a matmul (M, N, K) tiled (bm, bn, bk) with the K-innermost
-output-stationary schedule of `kernels/matmul`:
+* `mxu_utilization` — fractional occupancy of the 128x128 systolic
+  array under (8, 128) tiling: DOSA's "spatial factor" term with the
+  spatial sizes frozen by silicon (a compute model, not traffic);
+* the seconds-domain roofline `latency = max(compute, memory)` against
+  `peak_flops` / `hbm_bw` (plus `step_roofline`'s ICI collective term);
+* one convention: each output tile is written once *and read back by
+  the downstream op* (+M*N words of HBM traffic) — DOSA models a layer
+  in isolation and stops at the write.
 
-    HBM bytes  = MK * ceil(N/bn)        (X re-read per N tile)
-               + KN * ceil(M/bm)        (Y re-read per M tile)
-               + 2 * MN                 (O write + downstream read)
-    compute    = 2MNK / (peak * mxu_utilization(bm, bn, bk))
-
-`mxu_utilization` models the 128x128 systolic array and (8, 128)
-tiling: fractional occupancy of the last-two-dims tiles — DOSA's
-"spatial factor" term with the spatial sizes frozen by silicon.
-Everything is smooth in log-block-space except the ceil terms, which we
-relax with a smooth-ceil (the same trick as the paper's factor>1 mask:
-exact forward, piecewise gradient).
+The matmul dims map onto DOSA's 7-space as P=M, C=K_contract, K=N
+(`problem.Layer.matmul`), with the K-innermost output-stationary
+ordering of `kernels/matmul` at HBM level.  The ceil-shaped grid terms
+use a smooth-ceil (exact forward, pass-through gradient), the same
+trick as the paper's factor>1 mask.
 """
 from __future__ import annotations
 
@@ -32,6 +34,12 @@ import jax
 import jax.numpy as jnp
 
 from .arch import TPU_V5E, TPUTarget
+from .archspec import TPU_V5E_SPEC, compile_spec
+from .mapping import OS_ORD, TEMPORAL
+from .model import capacities, traffic_spec
+from .problem import C as C_D, K as K_D, P as P_D, I_T, O_T, W_T
+
+_STRIDES = (1.0, 1.0)
 
 
 def smooth_ceil(x):
@@ -50,14 +58,38 @@ def mxu_utilization(bm, bn, bk, target: TPUTarget = TPU_V5E):
     return util_m * util_n * util_k
 
 
+def _tile_factors(m, n, k, bm, bn, bk):
+    """(2, 3, 7) factor tensor of the (bm, bn, bk) schedule on the TPU
+    spec's VREG/VMEM/HBM hierarchy: VMEM holds one (possibly clamped)
+    tile per operand, HBM carries the smooth-ceil grid loops."""
+    grid_m = smooth_ceil(m / bm)
+    grid_n = smooth_ceil(n / bn)
+    grid_k = smooth_ceil(k / bk)
+    f = jnp.ones((2, 3, 7))
+    f = f.at[TEMPORAL, 1, P_D].set(m / grid_m)
+    f = f.at[TEMPORAL, 1, K_D].set(n / grid_n)
+    f = f.at[TEMPORAL, 1, C_D].set(k / grid_k)
+    f = f.at[TEMPORAL, 2, P_D].set(grid_m)
+    f = f.at[TEMPORAL, 2, K_D].set(grid_n)
+    f = f.at[TEMPORAL, 2, C_D].set(grid_k)
+    return f
+
+
 def matmul_latency(m, n, k, bm, bn, bk, dtype_bytes: float = 2.0,
                    target: TPUTarget = TPU_V5E):
     """Differentiable latency (seconds) + aux terms for one matmul tile
-    schedule on one chip."""
-    grid_m = smooth_ceil(m / bm)
-    grid_n = smooth_ceil(n / bn)
-    hbm_bytes = (m * k * grid_n + k * n * grid_m) * dtype_bytes \
-        + 2.0 * m * n * dtype_bytes
+    schedule on one chip.  HBM traffic comes from the shared DOSA
+    traffic model (Eqs. 6-11) evaluated on the TPU spec's hierarchy;
+    compute comes from the MXU occupancy model."""
+    cspec = compile_spec(TPU_V5E_SPEC)
+    f = _tile_factors(m, n, k, bm, bn, bk)
+    # K-innermost output-stationary HBM loop order (kernels/matmul).
+    order = jnp.array([0, 0, OS_ORD])
+    caps = capacities(f, jnp.asarray(_STRIDES))
+    macs = jnp.asarray(float(m) * float(n) * float(k))
+    tr = traffic_spec(cspec, f, order, caps, macs)
+    hbm_words = tr.accesses[cspec.backing] + m * n   # + downstream read
+    hbm_bytes = hbm_words * dtype_bytes
     compute_s = 2.0 * m * n * k / (
         target.peak_flops * mxu_utilization(bm, bn, bk, target))
     memory_s = hbm_bytes / target.hbm_bw
@@ -67,8 +99,15 @@ def matmul_latency(m, n, k, bm, bn, bk, dtype_bytes: float = 2.0,
 
 
 def vmem_footprint(bm, bn, bk, dtype_bytes: float = 2.0):
-    """Double-buffered input tiles + f32 accumulator (bytes)."""
-    return (2.0 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4.0)
+    """Double-buffered input tiles + f32 accumulator (bytes), from the
+    shared capacity model (Eqs. 2-5) at the VMEM level."""
+    f = jnp.ones((2, 3, 7))
+    f = f.at[TEMPORAL, 1, P_D].set(bm)
+    f = f.at[TEMPORAL, 1, K_D].set(bn)
+    f = f.at[TEMPORAL, 1, C_D].set(bk)
+    caps = capacities(f, jnp.asarray(_STRIDES))
+    return (2.0 * (caps[1, W_T] + caps[1, I_T]) * dtype_bytes
+            + caps[1, O_T] * 4.0)
 
 
 def vmem_penalty(bm, bn, bk, dtype_bytes: float = 2.0,

@@ -1,0 +1,259 @@
+"""ArchSpec layer: golden equivalence against the legacy Gemmini
+constants and the pre-refactor model values, read-only ordering tables,
+and co-search through non-Gemmini specs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import arch, model
+from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, HWConfig,
+                                 TPU_V5E_SPEC, compile_spec,
+                                 ordering_combos_for)
+from repro.core.problem import Layer, Workload
+from repro.core.search import FREE_MASK, SearchConfig, dosa_search, \
+    generate_start_points
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence 1: compile_spec(GEMMINI_SPEC) reproduces the
+# module-level constants the pre-spec model hard-coded.
+# ---------------------------------------------------------------------------
+
+def test_compiled_gemmini_reproduces_constants():
+    cs = compile_spec(GEMMINI_SPEC)
+    assert cs.n_levels == arch.NLEVELS
+    assert cs.level_names == arch.LEVEL_NAMES
+    np.testing.assert_array_equal(cs.b_matrix, arch.B_GEMMINI)
+    np.testing.assert_array_equal(cs.word_bytes, arch.WORD_BYTES)
+    # Tensor -> level chains of Table 4 (innermost first).
+    assert cs.tensor_levels == {0: (arch.REG, arch.SP, arch.DRAM),
+                                1: (arch.SP, arch.DRAM),
+                                2: (arch.ACC, arch.DRAM)}
+    assert cs.searched_levels == (arch.ACC, arch.SP)
+    assert cs.spatial_sites == ((arch.ACC, 4), (arch.SP, 5))  # C | K
+    np.testing.assert_array_equal(cs.free_mask, FREE_MASK)
+    # EPA / bandwidth evaluators == the Table 2 formulas.
+    c_pe, acc_w, sp_w = 256.0, 32 * 1024 / 4.0, 128 * 1024.0
+    epa = cs.epa(c_pe, [0.0, acc_w, sp_w, 0.0])
+    sq = c_pe ** 0.5
+    assert epa[0] == arch.EPA_REG and epa[3] == arch.EPA_DRAM
+    assert epa[1] == arch.EPA_ACC_BASE + arch.EPA_ACC_SLOPE * 32.0 / sq
+    assert epa[2] == arch.EPA_SP_BASE + arch.EPA_SP_SLOPE * 128.0
+    assert epa == arch.epa_per_level(c_pe, acc_w, sp_w)
+    bw = cs.bandwidth(c_pe)
+    assert bw == [2.0 * c_pe, 2.0 * sq, 2.0 * sq, arch.DRAM_BW]
+    assert bw == arch.bandwidth_words_per_cycle(c_pe)
+    # Hardware-point conversion round-trips the legacy GemminiHW.
+    c_pe2, cap_words = cs.hw_words(arch.GEMMINI_DEFAULT)
+    assert c_pe2 == arch.GEMMINI_DEFAULT.c_pe
+    assert cap_words[arch.ACC] == arch.GEMMINI_DEFAULT.acc_words
+    assert cap_words[arch.SP] == arch.GEMMINI_DEFAULT.sp_words
+
+
+def test_ordering_combos_readonly_and_cached():
+    """The combo table is cached and shared; it must be immutable so a
+    caller's in-place edit cannot poison every later caller (the old
+    lru_cache returned a writable array)."""
+    combos = model.ordering_combos()
+    assert combos.shape == (27, 4)
+    assert not combos.flags.writeable
+    assert model.ordering_combos() is combos          # cached instance
+    with pytest.raises(ValueError):
+        combos[0, 0] = 2
+    # Legacy enumeration order: level 0 pinned, last level fastest.
+    np.testing.assert_array_equal(combos[:4],
+                                  [[0, 0, 0, 0], [0, 0, 0, 1],
+                                   [0, 0, 0, 2], [0, 0, 1, 0]])
+    three = ordering_combos_for(3)
+    assert three.shape == (9, 3) and not three.flags.writeable
+    assert ordering_combos_for(3) is three
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence 2: the spec-compiled engine reproduces the
+# pre-refactor values bit-for-bit on the seeded fig7 (unet) workload —
+# start generation (CoSA + random-hardware RNG stream), the
+# differentiable model, the population path, and the oracle.  Constants
+# below were captured from the pre-ArchSpec implementation.
+# ---------------------------------------------------------------------------
+
+_GOLDEN_START_EDPS = [8.672344016506823e+21, 4.769376160661961e+19]
+_GOLDEN_EVAL_EDP0 = 9.355368601283331e+21
+_GOLDEN_POP_EDPS = [9.355368601283331e+21, 5.247161518035409e+19]
+_GOLDEN_HW0 = (16.0, 2048.0, 1048576.0)      # c_pe, acc_words, sp_words
+_GOLDEN_ORACLE0_NOQUANT = 8.672344014738924e+21
+
+
+def test_golden_fig7_unet_bit_for_bit():
+    from repro.core.mapping import stack_mappings
+    from repro.core.oracle import evaluate_workload
+    from repro.workloads import dnn_zoo
+
+    wl = dnn_zoo.get_workload("unet")
+    cfg = SearchConfig(n_start_points=2, seed=11)
+    starts, edps, n_evals = generate_start_points(wl, cfg)
+    assert edps == _GOLDEN_START_EDPS
+    assert n_evals == 2
+    strides = jnp.asarray(wl.strides_array(), dtype=jnp.float32)
+    repeats = jnp.asarray(wl.repeats_array(), dtype=jnp.float32)
+    fs = jnp.asarray(np.stack([stack_mappings(ms)[0] for ms in starts]))
+    orders = jnp.asarray(np.stack([stack_mappings(ms)[1] for ms in starts]))
+    edp0, (_, _, hw) = model.workload_eval(fs[0], orders[0], strides,
+                                           repeats)
+    assert float(edp0) == _GOLDEN_EVAL_EDP0
+    assert (float(hw.c_pe), float(hw.acc_words),
+            float(hw.sp_words)) == _GOLDEN_HW0
+    pop = model.population_edp(fs, orders, strides, repeats)
+    assert [float(x) for x in np.asarray(pop)] == _GOLDEN_POP_EDPS
+    # Oracle cross-check: quantized EDP equals the recorded start EDP,
+    # unquantized matches its own golden capture.
+    oe, _ = evaluate_workload(starts[0], wl.layers)
+    assert oe == _GOLDEN_START_EDPS[0]
+    oe_nq, _ = evaluate_workload(starts[0], wl.layers, quantize_dram=False)
+    assert oe_nq == _GOLDEN_ORACLE0_NOQUANT
+
+
+def test_spec_entry_points_match_legacy_wrappers():
+    """The legacy Gemmini API is a thin shim over the spec core: both
+    paths must agree exactly."""
+    cs = compile_spec(GEMMINI_SPEC)
+    layer = Layer(dims=(1, 1, 56, 56, 64, 64, 1))
+    from repro.core.mapping import random_mapping
+    m = random_mapping(np.asarray(layer.dims), np.random.default_rng(7))
+    f, order = jnp.asarray(m.f), jnp.asarray(m.order)
+    strides = jnp.asarray([1.0, 1.0])
+    hw = model.infer_hw(f[None], strides[None])
+    legacy = model.layer_metrics(f, order, strides, hw.c_pe, hw.acc_words,
+                                 hw.sp_words)
+    shw = model.infer_hw_spec(cs, f[None], strides[None])
+    spec = model.layer_metrics_spec(cs, f, order, strides, shw.c_pe,
+                                    shw.cap_words)
+    assert float(legacy.latency) == float(spec.latency)
+    assert float(legacy.energy) == float(spec.energy)
+    assert float(hw.c_pe) == float(shw.c_pe)
+    assert float(hw.acc_words) == float(shw.cap_words[arch.ACC])
+    assert float(hw.sp_words) == float(shw.cap_words[arch.SP])
+
+
+# ---------------------------------------------------------------------------
+# New targets: the same differentiable model + iterative oracle agree on
+# non-Gemmini hierarchies, and the one search engine drives them.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,hw", [
+    (EDGE_SPEC, HWConfig(pe_dim=16, cap_kb=(256.0,))),
+    (TPU_V5E_SPEC, HWConfig(pe_dim=128, cap_kb=())),
+])
+def test_model_matches_oracle_on_new_specs(spec, hw):
+    from repro.core.cosa import cosa_map
+    from repro.core.oracle import evaluate
+
+    cs = compile_spec(spec)
+    layer = Layer(dims=(3, 3, 28, 28, 64, 128, 2))
+    m = cosa_map(layer, hw, spec=spec)
+    r = evaluate(m, layer, hw=hw, quantize_dram=False, spec=spec)
+    assert r.valid, r.reason
+    c_pe, cap_words = cs.hw_words(hw)
+    lm = model.layer_metrics_spec(
+        cs, jnp.asarray(m.f), jnp.asarray(m.order), jnp.asarray([1., 1.]),
+        jnp.asarray(c_pe), jnp.asarray(cap_words))
+    np.testing.assert_allclose(float(lm.latency), r.latency, rtol=1e-4)
+    np.testing.assert_allclose(float(lm.energy), r.energy, rtol=1e-4)
+
+
+def test_edge_spec_cosearch_improves_and_respects_caps():
+    """End-to-end co-search on the 3-level edge spec: 9-combo ordering
+    tables, shared-SRAM capacity inference, 32-wide PE cap."""
+    from repro.core.mapping import SPATIAL
+    from repro.core.oracle import evaluate_workload
+
+    wl = Workload(layers=(Layer.matmul(256, 512, 384),), name="m")
+    cfg = SearchConfig(steps=60, round_every=30, n_start_points=2, seed=0,
+                       spec=EDGE_SPEC)
+    res = dosa_search(wl, cfg)
+    assert np.isfinite(res.best_edp)
+    assert res.best_edp <= min(res.start_edps)
+    assert isinstance(res.best_hw, HWConfig)
+    assert 1 <= res.best_hw.pe_dim <= EDGE_SPEC.max_pe_dim
+    for m in res.best_mappings:
+        assert m.f.shape == (2, 3, 7)
+        assert m.f[SPATIAL].max() <= EDGE_SPEC.max_pe_dim
+    edp, _ = evaluate_workload(res.best_mappings, wl.layers, spec=EDGE_SPEC)
+    assert edp == pytest.approx(res.best_edp, rel=1e-6)
+
+
+@pytest.mark.slow
+def test_all_three_specs_through_both_engines():
+    """Sequential and batched engines produce identical results for
+    Gemmini, TPU v5e and the edge spec (seeded equivalence, the
+    multi-target form of test_batched_matches_sequential)."""
+    wl = Workload(layers=(Layer.conv(32, 64, 3, 28, name="c"),
+                          Layer.matmul(256, 512, 384, name="m")), name="w")
+    for spec in (None, TPU_V5E_SPEC, EDGE_SPEC):
+        cfg = SearchConfig(steps=40, round_every=20, n_start_points=2,
+                           seed=3, spec=spec)
+        seq = dosa_search(wl, cfg)
+        bat = dosa_search(wl, cfg, population=2)
+        assert bat.best_edp == pytest.approx(seq.best_edp, rel=1e-6)
+        assert bat.n_evals == seq.n_evals
+        assert bat.start_edps == seq.start_edps
+
+
+def test_round_caps_respects_round_increment():
+    """Capacity rounding must round *bytes* up to `sram_round_bytes`
+    and report KB — not the increment count (regression: a 4 KB-rounded
+    spec used to report hardware 4x too small to hold its mappings)."""
+    import dataclasses
+    spec = dataclasses.replace(EDGE_SPEC, name="edge4k",
+                               sram_round_bytes=4096)
+    cs = compile_spec(spec)
+    (kb,) = cs.round_caps([10000.0])          # 10000 words * 1 B/word
+    assert kb == 12.0                          # ceil(10000/4096)*4096/1024
+    _, cap_words = cs.hw_words(HWConfig(pe_dim=8, cap_kb=(kb,)))
+    assert cap_words[1] >= 10000.0
+    # Gemmini (1 KB increments) unchanged: 5000 B -> 5 KB.
+    (acc_kb, sp_kb) = compile_spec(GEMMINI_SPEC).round_caps([100.0, 5000.0])
+    assert (acc_kb, sp_kb) == (1.0, 5.0)
+
+
+def test_rounding_keeps_level0_spatial_sites():
+    """A spec with a spatial site at level 0 must keep that factor
+    through rounding (regression: the site loop used to skip level 0,
+    silently resetting the PE-array parallelism to 1)."""
+    import dataclasses
+    from repro.core.rounding import round_mapping
+    from repro.core.mapping import SPATIAL
+
+    spec = dataclasses.replace(
+        EDGE_SPEC, name="edge_l0spatial",
+        spatial_sites=((0, 4), (1, 5)))        # C at level 0, K at SRAM
+    f = np.ones((2, 3, 7))
+    f[SPATIAL, 0, 4] = 16.0
+    f[SPATIAL, 1, 5] = 8.0
+    dims = np.array([1, 1, 8, 1, 64, 32, 1])
+    m = round_mapping(f, np.zeros(3, dtype=np.int64), dims, pe_cap=32,
+                      spec=spec)
+    assert m.f[SPATIAL, 0, 4] == 16.0
+    assert m.f[SPATIAL, 1, 5] == 8.0
+    assert np.allclose(m.f.prod(axis=(0, 1)), dims)
+
+
+def test_tpu_spec_fixed_silicon_constraints():
+    """The TPU spec searches mappings only: PE side is pinned to the
+    MXU, VMEM capacity is a hard oracle constraint."""
+    from repro.core.oracle import evaluate
+    from repro.core.mapping import TEMPORAL
+
+    cs = compile_spec(TPU_V5E_SPEC)
+    assert cs.searched_levels == ()
+    assert cs.fixed_capacity == ((1, TPU_V5E_SPEC.levels[1].size_words),)
+    # A mapping whose VMEM tile exceeds the fixed capacity is invalid.
+    layer = Layer.matmul(1 << 14, 1 << 14, 1 << 14)
+    f = np.ones((2, 3, 7))
+    f[TEMPORAL, 1, 2] = 1 << 14   # P resident at VMEM
+    f[TEMPORAL, 1, 4] = 1 << 14   # C resident at VMEM -> 256M-word X tile
+    f[TEMPORAL, 2, 5] = 1 << 14   # K at HBM
+    from repro.core.mapping import Mapping
+    m = Mapping(f=f, order=np.zeros(3, dtype=np.int64))
+    r = evaluate(m, layer, spec=TPU_V5E_SPEC)
+    assert not r.valid and "VMEM overflow" in r.reason

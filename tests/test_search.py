@@ -114,6 +114,7 @@ def test_random_search_and_bo(tiny_workload):
     assert np.isfinite(best_bo)
 
 
+@pytest.mark.slow
 def test_start_point_rejection():
     """Sec. 5.3.1: later start points more than 10x worse than the best
     seen are rejected (checked indirectly: all accepted starts within

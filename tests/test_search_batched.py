@@ -18,6 +18,7 @@ def two_layer_workload() -> Workload:
     ), name="two")
 
 
+@pytest.mark.slow
 def test_batched_matches_sequential(two_layer_workload):
     """Seeded equivalence: both engines descend from identical start
     points (same RNG stream) through the same protocol, so the best
@@ -34,6 +35,7 @@ def test_batched_matches_sequential(two_layer_workload):
     assert bat.history[-1][1] == pytest.approx(seq.history[-1][1], rel=1e-6)
 
 
+@pytest.mark.slow
 def test_batched_chunks_smaller_than_starts(two_layer_workload):
     """population < n_start_points processes the starts in chunks; the
     set of descents (and hence the best) is unchanged."""
