@@ -1,0 +1,89 @@
+"""Fleet co-search benchmark: one run over targets x workloads.
+
+Drives `fleet_search` across the three shipped ArchSpecs and a
+two-workload portfolio, reporting per-(target, workload) bests, the
+engine-sharing count (same-depth specs must share one batched engine)
+and the Pareto frontier, which is written to
+``bench_results/fleet_frontier.csv`` (the CI artifact).  Raises — and
+so fails the bench-smoke gate — if the frontier is degenerate.
+"""
+from __future__ import annotations
+
+from repro.core import fleet as fleet_mod
+from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC,
+                                 engine_group_key)
+from repro.core.fleet import fleet_search
+from repro.core.problem import Layer, Workload
+from repro.core.search import SearchConfig
+
+from .common import OUTPUT_DIR, Row, Timer, save_json
+
+SPECS = (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC)
+
+
+def _portfolio() -> list[Workload]:
+    """Two CI-sized workloads with different compute/memory balance."""
+    return [
+        Workload(layers=(Layer.conv(64, 128, 3, 28, name="conv"),),
+                 name="convnet"),
+        Workload(layers=(Layer.matmul(512, 1024, 768, name="gemm"),),
+                 name="gemm"),
+    ]
+
+
+def run(scale: str = "quick") -> list[Row]:
+    if scale == "paper":
+        cfg = SearchConfig(steps=1490, round_every=500, n_start_points=7,
+                           seed=7)
+    else:
+        cfg = SearchConfig(steps=200, round_every=100, n_start_points=2,
+                           seed=7)
+
+    workloads = _portfolio()
+    n_groups = len({engine_group_key(s) for s in SPECS})
+    fleet_mod._FLEET_ENGINE_CACHE.clear()
+    with Timer() as t:
+        res = fleet_search(workloads, SPECS, cfg)
+    n_engines = len(fleet_mod._FLEET_ENGINE_CACHE)
+
+    # --- gates: engine sharing + a non-degenerate frontier.
+    expect_engines = n_groups * len(workloads)
+    if n_engines != expect_engines:
+        raise AssertionError(
+            f"engine sharing broken: {n_engines} engines built, expected "
+            f"{expect_engines} ({n_groups} structural groups x "
+            f"{len(workloads)} workloads)")
+    front = res.frontier()
+    if not (2 <= len(front) <= len(res.entries)):
+        raise AssertionError(f"degenerate Pareto frontier: {len(front)} "
+                             f"points from {len(res.entries)} entries")
+    for e in front:
+        if not (e.best_energy > 0 and e.best_latency > 0
+                and e.best_edp < float("inf")):
+            raise AssertionError(f"non-finite frontier point {e.spec_name}/"
+                                 f"{e.workload}")
+
+    OUTPUT_DIR.mkdir(parents=True, exist_ok=True)
+    csv_path = OUTPUT_DIR / "fleet_frontier.csv"
+    csv_path.write_text(res.to_csv())
+
+    total_evals = sum(e.n_evals for e in res.entries)
+    rows = []
+    for e in res.entries:
+        rows.append(Row(f"fleet_{e.spec_name}_{e.workload}",
+                        t.us(total_evals),
+                        f"edp={e.best_edp:.4e} en={e.best_energy:.3e} "
+                        f"lat={e.best_latency:.3e} pe={e.best_hw.pe_dim} "
+                        f"evals={e.n_evals}"))
+    rows.append(Row("fleet_summary", 0.0,
+                    f"{len(SPECS)}x{len(workloads)} portfolio | "
+                    f"{n_engines} engines for {len(SPECS) * len(workloads)}"
+                    f" searches | frontier={len(front)} -> {csv_path}"))
+    save_json("fleet", {
+        "seconds": t.seconds, "n_engines": n_engines,
+        "frontier": [(e.spec_name, e.workload) for e in front],
+        "entries": {f"{e.spec_name}/{e.workload}": {
+            "edp": e.best_edp, "energy": e.best_energy,
+            "latency": e.best_latency, "n_evals": e.n_evals}
+            for e in res.entries}})
+    return rows

@@ -1,21 +1,23 @@
-"""Co-search one workload across three accelerator targets with the
-same engine — the ArchSpec layer in ~30 lines of user code.
+"""Co-search a workload portfolio across three accelerator targets in
+ONE fleet run — the multi-target story of the ArchSpec layer.
 
     PYTHONPATH=src python examples/multi_target_cosearch.py [--steps N]
 
 Each target is an `ArchSpec` data file, not a model fork: Gemmini (the
 paper's accelerator), TPU v5e (fixed silicon, so the co-search reduces
 to mapping search under the VMEM/MXU constraints), and a 3-level edge
-accelerator with one shared SRAM.  Everything downstream — the
-differentiable model, the iterative oracle, CoSA seeding, rounding,
-ordering search, both GD engines — reads the compiled spec's tables.
+accelerator with one shared SRAM.  `fleet_search` groups the specs by
+hierarchy structure (`engine_group_key`) — TPU v5e and the edge spec
+share one batched scan/vmap engine, their populations stacked into a
+single device program with per-member spec tables — and reports every
+(target, workload) best plus the Pareto frontier in (energy, latency).
 """
 import argparse
 
-from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC,
-                                 compile_spec)
+from repro.core.archspec import EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC
+from repro.core.fleet import fleet_search
 from repro.core.problem import Layer, Workload
-from repro.core.search import SearchConfig, dosa_search
+from repro.core.search import SearchConfig
 
 
 def main() -> None:
@@ -24,20 +26,26 @@ def main() -> None:
     ap.add_argument("--starts", type=int, default=2)
     args = ap.parse_args()
 
-    workload = Workload(layers=(
-        Layer.conv(64, 128, 3, 28, name="conv3x3"),
-        Layer.matmul(512, 1024, 768, name="gemm"),
-    ), name="demo")
+    workloads = [
+        Workload(layers=(Layer.conv(64, 128, 3, 28, name="conv3x3"),),
+                 name="convnet"),
+        Workload(layers=(Layer.matmul(512, 1024, 768, name="gemm"),),
+                 name="gemm"),
+    ]
+    cfg = SearchConfig(steps=args.steps,
+                       round_every=max(args.steps // 2, 1),
+                       n_start_points=args.starts, seed=7)
+    res = fleet_search(workloads, (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC),
+                       cfg)
 
-    for spec in (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC):
-        cfg = SearchConfig(steps=args.steps, round_every=args.steps // 2,
-                           n_start_points=args.starts, seed=7, spec=spec)
-        res = dosa_search(workload, cfg, population=args.starts)
-        hw = res.best_hw
-        caps = compile_spec(spec).hw_kbs(hw)
-        print(f"{spec.name:>8}: EDP {res.best_edp:.4e}  "
-              f"pe_dim={hw.pe_dim}  cap_kb={caps}  "
-              f"samples={res.n_evals}")
+    front = {id(e) for e in res.frontier()}
+    print(f"{'target':>8} {'workload':>9} {'EDP':>11} {'energy pJ':>11} "
+          f"{'latency cyc':>12}  pareto")
+    for e in res.entries:
+        print(f"{e.spec_name:>8} {e.workload:>9} {e.best_edp:11.4e} "
+              f"{e.best_energy:11.4e} {e.best_latency:12.4e}  "
+              f"{'*' if id(e) in front else ''}")
+    print("\nfrontier CSV:\n" + res.to_csv())
 
 
 if __name__ == "__main__":

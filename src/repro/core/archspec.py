@@ -251,6 +251,13 @@ class CompiledSpec:
             self._free_mask_j = jnp.asarray(self.free_mask)
         return self._free_mask_j
 
+    @property
+    def pe_cap(self) -> int:
+        """The spec's PE-array side bound: the silicon side for fixed
+        arrays, else the search cap.  The single source of the default
+        spatial cap for rounding, random mappings and random hardware."""
+        return int(self.spec.fixed_pe_dim or self.spec.max_pe_dim)
+
     # -- hardware-point conversions ------------------------------------
 
     def hw_kbs(self, hw) -> tuple[float, ...]:
@@ -319,6 +326,49 @@ class CompiledSpec:
             else:
                 out.append(bw.coeff)
         return out
+
+
+@functools.lru_cache(maxsize=None)
+def sites_per_dim(cspec: CompiledSpec) -> tuple:
+    """Per problem dim, the (spatial|temporal, level) sites that may hold
+    an integer factor of that dim, innermost -> outermost.  The shared
+    site schedule of rounding (`rounding.round_mapping`) and random
+    mapping generation (`mapping.random_mapping`): level-0 temporal
+    tiling is only realizable for the spec's level-0 dims
+    (weight-irrelevant P/Q/N on Gemmini WS); a dim's spatial site
+    precedes its temporal factor at the same level.  The backing store
+    is excluded — its temporal factor absorbs the remainder."""
+    spatial = {(lvl, d) for (lvl, d) in cspec.spatial_sites}
+    per_dim = []
+    for d in range(7):
+        sites: list[tuple[int, int]] = []
+        for lvl in range(cspec.backing):
+            if (lvl, d) in spatial:
+                sites.append((SPATIAL, lvl))
+            if lvl > 0 or d in cspec.spec.level0_temporal_dims:
+                sites.append((TEMPORAL, lvl))
+        per_dim.append(tuple(sites))
+    return tuple(per_dim)
+
+
+def engine_group_key(spec) -> tuple:
+    """Structural engine-sharing key for fleet co-search.  Two specs with
+    the same key compile to identical traced-model *structure* — same
+    mapping tensor shape (2, n_levels, 7), tensor -> level chains,
+    spatial sites, GD free mask and ordering-combo tables — so one
+    jitted fleet engine can batch their populations into a single
+    vmapped device program, with the numeric constants (EPA models,
+    bandwidth coefficients, word sizes, PE caps, fixed/searched
+    capacities) riding along as traced per-member parameters
+    (`fleet.SpecParams`).  Specs with different keys (e.g. a 4-level
+    Gemmini vs. 3-level TPU/edge hierarchies) run as separate cached
+    engines."""
+    cspec = resolve_spec(spec)
+    s = cspec.spec
+    return (cspec.n_levels,
+            tuple(tuple(sorted(l.tensors)) for l in s.levels),
+            tuple(cspec.spatial_sites),
+            tuple(sorted(s.level0_temporal_dims)))
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,481 @@
+"""Fleet co-search: one run over a *portfolio* of ArchSpec targets.
+
+`dosa_search` optimizes one accelerator spec at a time.  The fleet
+driver extends the paper's one-loop claim to a set of targets — the
+direction DANCE (differentiable accelerator/network co-exploration) and
+DiffuSE (cross-layer DSE over accelerator configs) pursue with batched
+multi-config evaluation: co-search a workload portfolio across several
+`ArchSpec`s in one run and report the Pareto frontier of
+targets x workloads.
+
+Engine sharing
+--------------
+Specs are grouped by `archspec.engine_group_key` — the *structural*
+fingerprint of the traced model (hierarchy depth, tensor -> level
+chains, spatial sites, level-0 temporal dims).  All specs in a group
+share the (2, n_levels, 7) mapping tensor shape, the GD free mask and
+the ordering tables, so their start-point populations are stacked into
+ONE member axis and advanced by ONE jitted scan/vmap engine (the PR 1
+batched population runner, lifted so that every numeric constant the
+old engine baked into the trace — EPA models, bandwidth coefficients,
+word sizes, PE caps, fixed/searched capacities — instead arrives as a
+traced per-member `SpecParams`).  TPU v5e and the 3-level edge spec
+share one engine; Gemmini's 4-level hierarchy compiles its own.  Host
+work between GD segments (rounding, ordering re-selection, oracle
+evaluation) runs per spec, exactly as in `dosa_search`.
+
+The per-member parametric model mirrors `model.layer_metrics_spec` /
+`model.infer_hw_spec` with the spec's Python-branching evaluators
+replaced by masked array arithmetic; unconstrained levels carry a large
+finite capacity sentinel (`_BIG`) instead of +inf so `slope * kb`
+stays exactly 0.0 rather than NaN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .archspec import (ArchSpec, CompiledSpec, engine_group_key,
+                       resolve_spec)
+from .mapping import Mapping, stack_mappings
+from .model import (SpecHW, capacities, infer_hw_population_spec,
+                    layer_c_pe_spec, traffic_spec, utilized_pes,
+                    validity_penalty)
+from .oracle import evaluate_workload
+from .problem import Workload
+from .rounding import round_population
+from .search import (_Recorder, _generate_start_point, _segment_lengths,
+                     _spatial_cap_penalty, SearchConfig, build_f,
+                     make_segment_runner, orders_from_population,
+                     select_orderings_population_spec,
+                     theta_from_population)
+
+# Capacity sentinel for unconstrained levels.  Finite on purpose: the
+# level's EPA slope is 0, so `slope * (BIG * word_bytes / 1024)` is
+# exactly 0.0, and capacity-overflow ratios `req / BIG` vanish — no
+# NaN-through-`where` gradient hazards, unlike +inf.
+_BIG = 1e30
+
+_BW_KIND = {"const": 0.0, "pe_sqrt": 1.0, "pe_linear": 2.0}
+
+
+class SpecParams(NamedTuple):
+    """The numeric half of a compiled spec, as traced arrays — what
+    distinguishes same-group specs inside the shared fleet engine.
+    Leaves are per-member once stacked ((M, n_levels) / (M,))."""
+
+    epa_base: jnp.ndarray      # (n_levels,) pJ/word
+    epa_slope: jnp.ndarray     # (n_levels,) pJ/word per KB
+    epa_pe_scaled: jnp.ndarray  # (n_levels,) 1.0 => slope / sqrt(C_PE)
+    bw_coeff: jnp.ndarray      # (n_levels,)
+    bw_kind: jnp.ndarray       # (n_levels,) 0 const | 1 sqrt | 2 linear
+    word_bytes: jnp.ndarray    # (n_levels,)
+    cap_fixed: jnp.ndarray     # (n_levels,) fixed capacity words, _BIG else
+    searched: jnp.ndarray      # (n_levels,) 1.0 => capacity inferred
+    epa_mac: jnp.ndarray       # () pJ/MAC
+    pe_cap: jnp.ndarray        # () PE-array side bound
+    pe_fixed: jnp.ndarray      # () 1.0 => side pinned to pe_cap (silicon)
+
+
+def spec_params(spec) -> SpecParams:
+    """Lower one spec's numeric tables to a `SpecParams` (host numpy)."""
+    cspec = resolve_spec(spec)
+    s = cspec.spec
+    nl = cspec.n_levels
+    cap_fixed = np.full(nl, _BIG)
+    for (i, words) in cspec.fixed_capacity:
+        cap_fixed[i] = words
+    searched = np.zeros(nl)
+    for i in cspec.searched_levels:
+        searched[i] = 1.0
+    return SpecParams(
+        epa_base=np.array([l.epa.base for l in s.levels]),
+        epa_slope=np.array([l.epa.slope for l in s.levels]),
+        epa_pe_scaled=np.array([float(l.epa.pe_scaled) for l in s.levels]),
+        bw_coeff=np.array([l.bandwidth.coeff for l in s.levels]),
+        bw_kind=np.array([_BW_KIND[l.bandwidth.kind] for l in s.levels]),
+        word_bytes=np.asarray(cspec.word_bytes, dtype=float),
+        cap_fixed=cap_fixed,
+        searched=searched,
+        epa_mac=np.asarray(float(s.epa_mac)),
+        pe_cap=np.asarray(float(cspec.pe_cap)),
+        pe_fixed=np.asarray(float(s.fixed_pe_dim is not None)))
+
+
+def stack_spec_params(params: list[SpecParams]) -> SpecParams:
+    """One (M, ...) member axis from a list of per-member params."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack(xs), dtype=jnp.float32), *params)
+
+
+# ---------------------------------------------------------------------------
+# Parametric model pieces (one member; vmapped by the engine).  These
+# mirror model.layer_metrics_spec / infer_hw_spec with the compiled
+# spec's Python-branching EPA/bandwidth evaluators replaced by masked
+# array arithmetic over SpecParams.
+# ---------------------------------------------------------------------------
+
+def _epa_param(sp: SpecParams, c_pe, cap_words):
+    """(n_levels,) energy/access: base + slope * KB [/ sqrt(C_PE)]."""
+    kb = cap_words * sp.word_bytes / 1024.0
+    denom = jnp.where(sp.epa_pe_scaled > 0.0, c_pe ** 0.5, 1.0)
+    return sp.epa_base + sp.epa_slope * kb / denom
+
+
+def _bw_param(sp: SpecParams, c_pe):
+    """(n_levels,) words/cycle: coeff * {1, sqrt(C_PE), C_PE}."""
+    scale = jnp.where(sp.bw_kind > 1.5, c_pe,
+                      jnp.where(sp.bw_kind > 0.5, c_pe ** 0.5, 1.0))
+    return sp.bw_coeff * scale
+
+
+def _infer_hw_param(group: CompiledSpec, sp: SpecParams, f_all, strides,
+                    b_mat) -> SpecHW:
+    """Mapping-first minimal hardware (Eq. 1 / Fig. 3), parametric in
+    the member's searched/fixed pattern and PE bound.  f_all:
+    (L, 2, n_levels, 7)."""
+    caps = jax.vmap(capacities)(f_all, strides)         # (L, n_levels, 3)
+    req = jnp.max(jnp.sum(caps * b_mat[None], axis=2), axis=0)
+    c_pe_free = jnp.minimum(
+        jnp.max(jax.vmap(lambda f: layer_c_pe_spec(group, f))(f_all)),
+        sp.pe_cap ** 2)
+    c_pe = jnp.where(sp.pe_fixed > 0.0, sp.pe_cap ** 2, c_pe_free)
+    cap_words = jnp.where(sp.searched > 0.0, req, sp.cap_fixed)
+    return SpecHW(c_pe=c_pe, cap_words=cap_words)
+
+
+def _layer_el_param(group: CompiledSpec, sp: SpecParams, f, order, strides,
+                    c_pe, cap_words):
+    """(energy, latency) of one layer — layer_metrics_spec with the
+    EPA/bandwidth models read from SpecParams."""
+    caps = capacities(f, strides)
+    macs = jnp.prod(f)
+    tr = traffic_spec(group, f, order, caps, macs)
+    mem_lat = tr.accesses / _bw_param(sp, c_pe)
+    latency = jnp.maximum(macs / utilized_pes(f), jnp.max(mem_lat))
+    epa = _epa_param(sp, c_pe, cap_words)
+    energy = macs * sp.epa_mac + jnp.sum(tr.accesses * epa)
+    return energy, latency
+
+
+def member_edp(group: CompiledSpec, sp: SpecParams, f_all, orders, strides,
+               repeats):
+    """Network EDP (Eq. 14) of one member's workload mappings under its
+    own spec parameters, hardware inferred mapping-first."""
+    b_mat = jnp.asarray(group.b_matrix, dtype=jnp.float32)
+    hw = _infer_hw_param(group, sp, f_all, strides, b_mat)
+    e, l = jax.vmap(lambda f, o, s: _layer_el_param(
+        group, sp, f, o, s, hw.c_pe, hw.cap_words))(f_all, orders, strides)
+    return jnp.sum(e * repeats) * jnp.sum(l * repeats)
+
+
+# ---------------------------------------------------------------------------
+# The shared engine: one jitted scan/vmap GD segment runner per
+# (workload, structural group).  Cached so every same-group spec —
+# and every later fleet run over the same workload — reuses the trace.
+# ---------------------------------------------------------------------------
+
+_FLEET_ENGINE_CACHE: dict = {}
+_FLEET_ENGINE_CACHE_MAX = 16
+
+
+def fleet_engine_key(workload: Workload, spec, cfg: SearchConfig) -> tuple:
+    """Cache key of the shared fleet engine: structural group + the
+    config fields the traced program reads."""
+    return (workload, engine_group_key(spec), cfg.lr, cfg.penalty_weight)
+
+
+def make_fleet_runner(workload: Workload, spec, cfg: SearchConfig):
+    """Build (or fetch from cache) the fleet GD engine for `spec`'s
+    structural group: a jitted ``run_segment(theta, orders, params,
+    n_steps)`` advancing an (M, L, 2, n_levels, 7) member population by
+    `n_steps` Adam steps as one ``lax.scan`` over the member-vmapped
+    loss, where `params` is a stacked `SpecParams` carrying each
+    member's numeric spec tables.  Two specs with equal
+    `engine_group_key` provably share one engine (same cache entry —
+    asserted in tests)."""
+    key = fleet_engine_key(workload, spec, cfg)
+    hit = _FLEET_ENGINE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    group = resolve_spec(spec)       # structural representative
+    dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
+    strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
+    repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
+    free_mask_j = group.free_mask_j
+    sites = group.spatial_sites
+    b_mat = jnp.asarray(group.b_matrix, dtype=jnp.float32)
+    caps_b = jax.vmap(capacities)
+    lr, penalty_weight = cfg.lr, cfg.penalty_weight
+
+    def loss(theta, orders, sp: SpecParams):
+        f = build_f(theta, dims, free_mask_j)
+        edp = member_edp(group, sp, f, orders, strides, repeats)
+        pen = validity_penalty(f) \
+            + _spatial_cap_penalty(f, sp.pe_cap, sites)
+        # Fixed-silicon capacity overflow (e.g. TPU VMEM): unconstrained
+        # and searched levels carry the _BIG sentinel => zero penalty.
+        req = jnp.sum(caps_b(f, strides) * b_mat[None], axis=2)
+        pen = pen + jnp.sum(jnp.maximum(req / sp.cap_fixed[None] - 1.0,
+                                        0.0))
+        return jnp.log(edp) + penalty_weight * pen
+
+    pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0, 0))
+    # run_segment(theta, orders, params, n_steps=...) — the shared Adam
+    # scan executor, with the per-member spec tables as the extra arg.
+    run_segment = make_segment_runner(pop_grad, lr)
+
+    if len(_FLEET_ENGINE_CACHE) >= _FLEET_ENGINE_CACHE_MAX:
+        _FLEET_ENGINE_CACHE.pop(next(iter(_FLEET_ENGINE_CACHE)))
+    _FLEET_ENGINE_CACHE[key] = run_segment
+    return run_segment
+
+
+# ---------------------------------------------------------------------------
+# Results: per-(spec, workload) bests + the Pareto frontier
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetEntry:
+    """Best point found for one (spec, workload) pair."""
+
+    spec_name: str
+    workload: str
+    best_edp: float
+    best_energy: float          # pJ, repeat-scaled network total
+    best_latency: float         # cycles, repeat-scaled network total
+    best_hw: object             # GemminiHW | HWConfig
+    best_mappings: list[Mapping]
+    n_evals: int
+    start_edps: list[float]
+
+
+def _dominates(a: FleetEntry, b: FleetEntry) -> bool:
+    """a dominates b in (energy, latency) minimization."""
+    return (a.best_energy <= b.best_energy
+            and a.best_latency <= b.best_latency
+            and (a.best_energy < b.best_energy
+                 or a.best_latency < b.best_latency))
+
+
+def pareto_front(entries: list[FleetEntry]) -> list[FleetEntry]:
+    """Non-dominated subset of `entries` in (energy, latency)."""
+    return [e for e in entries
+            if not any(_dominates(o, e) for o in entries if o is not e)]
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Structured fleet output: one `FleetEntry` per (spec, workload),
+    plus Pareto reporting over the portfolio."""
+
+    entries: list[FleetEntry]
+
+    def entry(self, spec_name: str, workload: str) -> FleetEntry:
+        for e in self.entries:
+            if e.spec_name == spec_name and e.workload == workload:
+                return e
+        raise KeyError(f"no fleet entry ({spec_name}, {workload})")
+
+    def frontier(self, workload: str | None = None) -> list[FleetEntry]:
+        """The Pareto frontier over targets x workloads in
+        (energy, latency).  Targets are compared on the same workload
+        (cross-workload magnitudes aren't commensurable): `workload`
+        selects one workload's frontier; the default unions the
+        per-workload frontiers in entry order."""
+        if workload is not None:
+            return pareto_front([e for e in self.entries
+                                 if e.workload == workload])
+        out: list[FleetEntry] = []
+        for wl in dict.fromkeys(e.workload for e in self.entries):
+            out.extend(self.frontier(wl))
+        return out
+
+    def to_csv(self) -> str:
+        """CSV of every (spec, workload) best with an `on_frontier`
+        flag — the benchmark artifact format."""
+        front = {id(e) for e in self.frontier()}
+        lines = ["spec,workload,edp,energy_pj,latency_cycles,pe_dim,"
+                 "cap_kb,n_evals,on_frontier"]
+        for e in self.entries:
+            caps = "|".join(f"{kb:g}" for kb in
+                            _entry_cap_kbs(e))
+            lines.append(
+                f"{e.spec_name},{e.workload},{e.best_edp:.6e},"
+                f"{e.best_energy:.6e},{e.best_latency:.6e},"
+                f"{e.best_hw.pe_dim},{caps},{e.n_evals},"
+                f"{int(id(e) in front)}")
+        return "\n".join(lines) + "\n"
+
+
+def _entry_cap_kbs(e: FleetEntry) -> tuple:
+    hw = e.best_hw
+    return tuple(hw.cap_kb) if hasattr(hw, "cap_kb") \
+        else (hw.acc_kb, hw.sp_kb)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def _check_cfg(cfg: SearchConfig) -> None:
+    if cfg.spec is not None:
+        raise ValueError("fleet_search takes the spec portfolio as its "
+                         "own argument; leave SearchConfig.spec unset")
+    if cfg.surrogate is not None:
+        raise ValueError("the learned latency surrogate is Gemmini-only; "
+                         "fleet targets run the analytical model")
+    if cfg.fixed_hw is not None or cfg.latency_model is not None:
+        raise ValueError("fleet_search co-searches hardware per target; "
+                         "fixed_hw / latency_model are not supported")
+    if cfg.ordering_mode not in ("iterative", "none"):
+        raise ValueError(f"fleet ordering_mode must be 'iterative' or "
+                         f"'none', got {cfg.ordering_mode!r} (softmax "
+                         "ordering runs per-spec via dosa_search)")
+
+
+def _search_group(workload: Workload, specs: list[ArchSpec],
+                  cfg: SearchConfig) -> list[FleetEntry]:
+    """Co-search one structural group: every spec's start population is
+    stacked into one member axis and advanced by the shared engine;
+    rounding / ordering re-selection / oracle accounting run per spec
+    between GD segments (the dosa_search batched protocol, per spec)."""
+    run_segment = make_fleet_runner(workload, specs[0], cfg)
+    group = resolve_spec(specs[0])
+    dims = workload.dims_array()
+    dims_j = jnp.asarray(dims, dtype=jnp.float32)
+    strides = workload.strides_array().astype(float)
+    repeats = workload.repeats_array().astype(float)
+    free_mask_j = group.free_mask_j
+
+    # --- per-spec start populations (per-spec RNG streams seeded like
+    # dosa_search, so fleet starts match single-target runs), stacked
+    # into one member axis.  Every start is validated against its own
+    # target — the spec-aware mapping layer makes that assertable.
+    recs: list[_Recorder] = []
+    cspecs: list[CompiledSpec] = []
+    spans: list[tuple[int, int]] = []
+    thetas, orders_np, params = [], [], []
+    lo = 0
+    for spec in specs:
+        cspec = resolve_spec(spec)
+        scfg = dataclasses.replace(cfg, spec=spec)
+        rec = _Recorder(workload, scfg, cspec)
+        rng = np.random.default_rng(cfg.seed)
+        starts, best_start_edp = [], float("inf")
+        for _ in range(cfg.n_start_points):
+            mappings, edp0, best_start_edp = _generate_start_point(
+                workload, scfg, rng, best_start_edp, rec)
+            for m, drow in zip(mappings, dims):
+                m.validate(drow, spec=cspec)
+            rec.best.start_edps.append(edp0)
+            rec.record(mappings)
+            starts.append(mappings)
+        thetas.append(theta_from_population(starts, cspec.free_mask))
+        orders_np.append(orders_from_population(starts))
+        params += [spec_params(cspec)] * len(starts)
+        recs.append(rec)
+        cspecs.append(cspec)
+        spans.append((lo, lo + len(starts)))
+        lo += len(starts)
+
+    theta = jnp.asarray(np.concatenate(thetas), dtype=jnp.float32)
+    orders = jnp.asarray(np.concatenate(orders_np))
+    sp_stack = stack_spec_params(params)
+
+    for n_steps in _segment_lengths(cfg.steps, cfg.round_every):
+        theta = run_segment(theta, orders, sp_stack, n_steps=n_steps)
+        f_cont = np.asarray(jax.vmap(
+            lambda th: build_f(th, dims_j, free_mask_j))(theta))
+        orders_host = np.asarray(orders)
+        new_thetas, new_orders = [], []
+        for cspec, rec, (a, b) in zip(cspecs, recs, spans):
+            rec.count(n_steps * (b - a))
+            rounded = round_population(f_cont[a:b], orders_host[a:b], dims,
+                                       spec=cspec)
+            if cfg.ordering_mode == "iterative":
+                fs_pop = np.stack([stack_mappings(ms)[0] for ms in rounded])
+                hws = infer_hw_population_spec(
+                    cspec, jnp.asarray(fs_pop), jnp.asarray(strides))
+                sel = select_orderings_population_spec(
+                    cspec, fs_pop, strides, repeats, hws)
+                for ms, no in zip(rounded, sel):
+                    for mp, o in zip(ms, no):
+                        mp.order = o
+            for ms in rounded:
+                rec.record(ms)
+            new_thetas.append(theta_from_population(rounded, cspec.free_mask))
+            new_orders.append(orders_from_population(rounded))
+        theta = jnp.asarray(np.concatenate(new_thetas), dtype=jnp.float32)
+        orders = jnp.asarray(np.concatenate(new_orders))
+
+    entries = []
+    for spec, cspec, rec in zip(specs, cspecs, recs):
+        sr = rec.finish()
+        if sr.best_mappings and np.isfinite(sr.best_edp):
+            _, results = evaluate_workload(sr.best_mappings,
+                                           workload.layers, spec=cspec)
+            energy = sum(r.energy * layer.repeat
+                         for r, layer in zip(results, workload.layers))
+            latency = sum(r.latency * layer.repeat
+                          for r, layer in zip(results, workload.layers))
+        else:   # no valid candidate survived — report the degenerate point
+            energy = latency = float("inf")
+        entries.append(FleetEntry(
+            spec_name=spec.name, workload=workload.name,
+            best_edp=sr.best_edp, best_energy=float(energy),
+            best_latency=float(latency), best_hw=sr.best_hw,
+            best_mappings=sr.best_mappings, n_evals=sr.n_evals,
+            start_edps=sr.start_edps))
+    return entries
+
+
+def fleet_search(workloads: Workload | Iterable[Workload],
+                 specs: ArchSpec | Iterable[ArchSpec],
+                 cfg: SearchConfig | None = None) -> FleetResult:
+    """Co-search a workload portfolio across a set of ArchSpec targets
+    in one run.
+
+    Specs are grouped by `engine_group_key`; each group's populations
+    batch into one shared scan/vmap engine (numeric spec tables as
+    traced per-member parameters), different groups run as separate
+    cached engines.  Returns a `FleetResult` of per-(spec, workload)
+    bests and the Pareto frontier over targets x workloads."""
+    cfg = SearchConfig() if cfg is None else cfg
+    _check_cfg(cfg)
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    if isinstance(specs, ArchSpec):
+        specs = [specs]
+    workloads, specs = list(workloads), list(specs)
+    if not workloads or not specs:
+        raise ValueError("fleet_search needs >= 1 workload and >= 1 spec")
+    # Results are keyed (and Pareto-grouped) by name: duplicates would
+    # silently pool non-commensurable workloads into one frontier or
+    # alias two targets' entries — fail fast instead.
+    wl_names = [w.name for w in workloads]
+    spec_names = [s.name for s in specs]
+    if len(set(wl_names)) != len(wl_names):
+        raise ValueError(f"duplicate workload names in {wl_names}; give "
+                         "each Workload a distinct name")
+    if len(set(spec_names)) != len(spec_names):
+        raise ValueError(f"duplicate spec names in {spec_names}; give "
+                         "each ArchSpec a distinct name")
+
+    entries: list[FleetEntry] = []
+    for workload in workloads:
+        groups: dict[tuple, list[ArchSpec]] = {}
+        for spec in specs:
+            groups.setdefault(engine_group_key(spec), []).append(spec)
+        for group_specs in groups.values():
+            entries.extend(_search_group(workload, group_specs, cfg))
+    # Entry order: workload-major, then the caller's spec order.
+    order = {(s.name, w.name): i for i, (w, s) in enumerate(
+        (w, s) for w in workloads for s in specs)}
+    entries.sort(key=lambda e: order[(e.spec_name, e.workload)])
+    return FleetResult(entries=entries)

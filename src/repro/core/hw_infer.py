@@ -56,12 +56,21 @@ def minimal_hw(mappings: list[Mapping], layers: list[Layer]) -> GemminiHW:
     return minimal_hw_for(compile_spec(GEMMINI_SPEC), mappings, layers)
 
 
+def minimal_hw_population_for(cspec, population: list[list[Mapping]],
+                              layers: list[Layer]) -> list:
+    """Minimal hardware for each member of a population of workload
+    mappings on any spec (batched multi-start / fleet search): one
+    hardware point per member, each the per-parameter max over that
+    member's layers."""
+    return [minimal_hw_for(cspec, mappings, layers)
+            for mappings in population]
+
+
 def minimal_hw_population(population: list[list[Mapping]],
                           layers: list[Layer]) -> list[GemminiHW]:
-    """Minimal hardware for each member of a population of workload
-    mappings (batched multi-start search): one GemminiHW per member,
-    each the per-parameter max over that member's layers."""
-    return [minimal_hw(mappings, layers) for mappings in population]
+    """Legacy Gemmini entry point: one GemminiHW per member."""
+    return minimal_hw_population_for(compile_spec(GEMMINI_SPEC),
+                                     population, layers)
 
 
 def random_hw_spec(rng: np.random.Generator, spec=None) -> HWConfig:
@@ -71,7 +80,11 @@ def random_hw_spec(rng: np.random.Generator, spec=None) -> HWConfig:
     engine- and spec-path-independent."""
     cspec = resolve_spec(spec)
     lo, hi = cspec.spec.rand_pe_log2
-    pe_dim = int(2 ** rng.integers(lo, hi))
+    # The drawn side shares the spec's PE bound with rounding and
+    # random_mapping (`CompiledSpec.pe_cap`): fixed silicon pins the
+    # side outright, a search cap clamps a too-wide random range.  The
+    # RNG is consumed either way so seeded streams stay path-identical.
+    pe_dim = min(int(2 ** rng.integers(lo, hi)), cspec.pe_cap)
     if cspec.spec.fixed_pe_dim is not None:
         pe_dim = cspec.spec.fixed_pe_dim
     kbs = []

@@ -24,7 +24,8 @@ import dataclasses
 
 import numpy as np
 
-from .arch import ACC, DRAM, NLEVELS, REG, SP
+from .arch import ACC, DRAM, NLEVELS, SP
+from .archspec import resolve_spec, sites_per_dim
 from .problem import C, K, N, NDIMS, P, Q, R, S
 
 SPATIAL, TEMPORAL = 0, 1
@@ -64,17 +65,27 @@ class Mapping:
     def spatial(self, level: int, dim: int) -> float:
         return float(self.f[SPATIAL, level, dim])
 
-    def validate(self, dims: np.ndarray, atol: float = 1e-6) -> None:
-        """Raise if factor products don't match problem dims or fixed
-        spatial sites are violated."""
+    def validate(self, dims: np.ndarray, atol: float = 1e-6,
+                 spec=None) -> None:
+        """Raise if factor products don't match problem dims or the
+        target dataflow's fixed spatial sites are violated.  `spec`
+        selects the target (`ArchSpec` / `CompiledSpec`; default
+        Gemmini), so fleet code can assert start-point validity against
+        every member of a spec portfolio."""
+        cspec = resolve_spec(spec)
+        if self.f.shape != (2, cspec.n_levels, NDIMS):
+            raise ValueError(f"factor tensor {self.f.shape} does not fit "
+                             f"{cspec.spec.name}'s (2, {cspec.n_levels}, "
+                             f"{NDIMS}) hierarchy")
         prod = self.f.prod(axis=(0, 1))
         if not np.allclose(prod, dims, rtol=1e-6, atol=atol):
             raise ValueError(f"factor products {prod} != dims {dims}")
-        mask = np.ones((NLEVELS, NDIMS), dtype=bool)
-        for lvl, d in SPATIAL_SITES:
+        mask = np.ones((cspec.n_levels, NDIMS), dtype=bool)
+        for lvl, d in cspec.spatial_sites:
             mask[lvl, d] = False
         if not np.allclose(self.f[SPATIAL][mask], 1.0):
-            raise ValueError("spatial factor outside Gemmini WS sites")
+            raise ValueError(
+                f"spatial factor outside {cspec.spec.name} dataflow sites")
 
 
 def identity_mapping(dims: np.ndarray) -> Mapping:
@@ -85,34 +96,32 @@ def identity_mapping(dims: np.ndarray) -> Mapping:
 
 
 def random_mapping(dims: np.ndarray, rng: np.random.Generator,
-                   max_pe_dim: int = 128) -> Mapping:
+                   max_pe_dim: int | None = None, spec=None) -> Mapping:
     """Uniform-ish random valid integer mapping: per dim, split the prime
-    factorization across (spatial sites + temporal levels 0..2 + DRAM)."""
+    factorization across the target's factor sites (spatial sites +
+    realizable temporal levels), the backing store absorbing the
+    remainder.  The site schedule comes from the compiled spec
+    (`archspec.sites_per_dim`, shared with rounding), so random mappings
+    are valid for any `ArchSpec` — for Gemmini the schedule reproduces
+    the legacy hard-coded site list, keeping seeded draws bit-identical.
+    `max_pe_dim=None` caps spatial factors at the spec's PE bound
+    (`fixed_pe_dim` or `max_pe_dim`)."""
     from .problem import divisors
 
-    f = np.ones((2, NLEVELS, NDIMS), dtype=float)
+    cspec = resolve_spec(spec)
+    cap = cspec.pe_cap if max_pe_dim is None else max_pe_dim
+    f = np.ones((2, cspec.n_levels, NDIMS), dtype=float)
     for d in range(NDIMS):
         remaining = int(dims[d])
-        # Sites that may receive factors of dim d, inner to outer.  The
-        # register level holds exactly one weight per PE (Gemmini WS),
-        # so only weight-irrelevant dims (P, Q, N) may tile there.
-        sites: list[tuple[int, int]] = []
-        if d in (P, Q, N):
-            sites.append((TEMPORAL, REG))
-        sites += [(TEMPORAL, ACC), (TEMPORAL, SP)]
-        if d == C:
-            sites.insert(len(sites) - 2, (SPATIAL, ACC))
-        if d == K:
-            sites.insert(len(sites) - 1, (SPATIAL, SP))
-        for (k, lvl) in sites:
+        for (k, lvl) in sites_per_dim(cspec)[d]:
             divs = [x for x in divisors(remaining)]
             if k == SPATIAL:
-                divs = [x for x in divs if x <= max_pe_dim]
+                divs = [x for x in divs if x <= cap]
             pick = int(rng.choice(divs))
             f[k, lvl, d] = pick
             remaining //= pick
-        f[TEMPORAL, DRAM, d] = remaining
-    order = rng.integers(0, NORDERS, size=NLEVELS)
+        f[TEMPORAL, cspec.backing, d] = remaining
+    order = rng.integers(0, NORDERS, size=cspec.n_levels)
     return Mapping(f=f, order=order.astype(np.int64))
 
 

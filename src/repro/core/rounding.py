@@ -22,8 +22,8 @@ import functools
 
 import numpy as np
 
-from .arch import MAX_PE_DIM
-from .archspec import CompiledSpec, resolve_spec
+from .archspec import sites_per_dim as _sites_per_dim
+from .archspec import resolve_spec
 from .mapping import SPATIAL, TEMPORAL, Mapping
 from .problem import NDIMS, divisors
 
@@ -47,37 +47,23 @@ def _nearest_divisor(n: int, x: float, cap: int | None = None) -> int:
     return best
 
 
-@functools.lru_cache(maxsize=None)
-def _sites_per_dim(cspec: CompiledSpec) -> tuple:
-    """Sites receiving rounded factors per dim, innermost -> outermost.
-    Level-0 temporal tiling is only realizable for the spec's level-0
-    dims (weight-irrelevant P/Q/N on Gemmini WS); a dim's spatial site
-    precedes its temporal factor at the same level."""
-    spatial = {(lvl, d) for (lvl, d) in cspec.spatial_sites}
-    per_dim = []
-    for d in range(NDIMS):
-        sites: list[tuple[int, int]] = []
-        for lvl in range(cspec.backing):
-            if (lvl, d) in spatial:
-                sites.append((SPATIAL, lvl))
-            if lvl > 0 or d in cspec.spec.level0_temporal_dims:
-                sites.append((TEMPORAL, lvl))
-        per_dim.append(tuple(sites))
-    return tuple(per_dim)
-
-
 def round_mapping(f: np.ndarray, order: np.ndarray, dims: np.ndarray,
-                  pe_cap: int = MAX_PE_DIM, spec=None) -> Mapping:
+                  pe_cap: int | None = None, spec=None) -> Mapping:
     """Round continuous factors (2, n_levels, 7) to the nearest valid
     integer mapping; the backing-store temporal factor absorbs the
-    remainder."""
+    remainder.  The per-dim site schedule comes from the compiled spec
+    (`archspec.sites_per_dim`, shared with `mapping.random_mapping`);
+    `pe_cap=None` bounds spatial factors at the *spec's* PE limit
+    (`fixed_pe_dim` or `max_pe_dim`) instead of assuming Gemmini's 128."""
     cspec = resolve_spec(spec)
+    if pe_cap is None:
+        pe_cap = cspec.pe_cap
     f = np.asarray(f, dtype=float)
     out = np.ones((2, cspec.n_levels, NDIMS), dtype=float)
-    sites_per_dim = _sites_per_dim(cspec)
+    per_dim = _sites_per_dim(cspec)
     for d in range(NDIMS):
         remaining = int(dims[d])
-        for (k, lvl) in sites_per_dim[d]:
+        for (k, lvl) in per_dim[d]:
             cap = pe_cap if k == SPATIAL else None
             val = _nearest_divisor(remaining, float(f[k, lvl, d]), cap=cap)
             out[k, lvl, d] = val
@@ -87,7 +73,7 @@ def round_mapping(f: np.ndarray, order: np.ndarray, dims: np.ndarray,
 
 
 def round_all(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
-              pe_cap: int = MAX_PE_DIM, spec=None) -> list[Mapping]:
+              pe_cap: int | None = None, spec=None) -> list[Mapping]:
     """Round a whole workload: fs (L, 2, n_levels, 7), orders
     (L, n_levels), dims (L, 7)."""
     return [round_mapping(fs[i], orders[i], dims[i], pe_cap=pe_cap,
@@ -96,7 +82,7 @@ def round_all(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
 
 
 def round_population(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
-                     pe_cap: int = MAX_PE_DIM,
+                     pe_cap: int | None = None,
                      spec=None) -> list[list[Mapping]]:
     """Round a whole population of workload mappings on the host:
     fs (P, L, 2, n_levels, 7), orders (P, L, n_levels), dims (L, 7).

@@ -148,8 +148,10 @@ def _cspec(cfg: SearchConfig) -> CompiledSpec:
 
 
 def _pe_cap(cfg: SearchConfig, cspec: CompiledSpec) -> float:
+    """Spatial-factor bound: a frozen hardware point's array side, else
+    the spec's own PE bound (fixed silicon side or search cap)."""
     return float(cfg.fixed_hw.pe_dim if cfg.fixed_hw is not None
-                 else cspec.spec.max_pe_dim)
+                 else cspec.pe_cap)
 
 
 def _fixed_spec_hw(cfg: SearchConfig, cspec: CompiledSpec) -> SpecHW | None:
@@ -315,35 +317,43 @@ def adam_step(theta, grad, m, v, t, lr: float, b1=_ADAM_B1, b2=_ADAM_B2,
     return theta - lr * mh / (jnp.sqrt(vh) + eps), m, v
 
 
+def make_segment_runner(pop_grad, lr: float):
+    """Jitted Adam GD-segment executor shared by the batched population
+    engine and the fleet engine (`core/fleet.py`): advance a whole
+    population of log-factor tensors by `n_steps` Adam steps as a
+    single `jax.lax.scan` whose body evaluates `pop_grad(theta, *args)
+    -> (value, grad)`.  Fresh momentum per segment, matching the
+    sequential driver's reset after every rounding.  Extra positional
+    `args` (orders; per-member spec tables for the fleet) are carried
+    through to `pop_grad` unchanged; `n_steps` is keyword-only."""
+    @partial(jax.jit, static_argnames=("n_steps",))
+    def run_segment(theta, *args, n_steps: int):
+        def body(carry, t):
+            th, m, v = carry
+            _, g = pop_grad(th, *args)
+            m = _ADAM_B1 * m + (1 - _ADAM_B1) * g
+            v = _ADAM_B2 * v + (1 - _ADAM_B2) * g * g
+            mh = m / (1 - _ADAM_B1 ** t)
+            vh = v / (1 - _ADAM_B2 ** t)
+            th = th - lr * mh / (jnp.sqrt(vh) + _ADAM_EPS)
+            return (th, m, v), ()
+        ts = jnp.arange(1, n_steps + 1, dtype=theta.dtype)
+        zeros = jnp.zeros_like(theta)
+        (theta, _, _), _ = jax.lax.scan(body, (theta, zeros, zeros), ts)
+        return theta
+
+    return run_segment
+
+
 def make_population_runner(workload: Workload, cfg: SearchConfig):
     """Build the batched GD-segment executor: one jitted function that
     advances a whole (P, L, 2, n_levels, 7) population by `n_steps`
     Adam steps as a single `jax.lax.scan` over the vmapped loss
-    gradient.  Fresh momentum per segment, matching the sequential
-    driver's reset after every rounding.  Cached per (workload, cfg)
-    like `make_loss`."""
+    gradient.  Cached per (workload, cfg) like `make_loss`."""
     def build():
         loss, dims, strides, repeats = _make_loss_fn(workload, cfg)
         pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0))
-        lr = cfg.lr
-
-        @partial(jax.jit, static_argnames=("n_steps",))
-        def run_segment(theta, orders, n_steps: int):
-            def body(carry, t):
-                th, m, v = carry
-                _, g = pop_grad(th, orders)
-                m = _ADAM_B1 * m + (1 - _ADAM_B1) * g
-                v = _ADAM_B2 * v + (1 - _ADAM_B2) * g * g
-                mh = m / (1 - _ADAM_B1 ** t)
-                vh = v / (1 - _ADAM_B2 ** t)
-                th = th - lr * mh / (jnp.sqrt(vh) + _ADAM_EPS)
-                return (th, m, v), ()
-            ts = jnp.arange(1, n_steps + 1, dtype=theta.dtype)
-            zeros = jnp.zeros_like(theta)
-            (theta, _, _), _ = jax.lax.scan(body, (theta, zeros, zeros), ts)
-            return theta
-
-        return run_segment, dims, strides, repeats
+        return make_segment_runner(pop_grad, cfg.lr), dims, strides, repeats
 
     return _cached_engine(workload, cfg, "population", build)
 
@@ -670,7 +680,7 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
         orders = jnp.asarray(orders_from_population(chunk))
 
         for n_steps in segments:
-            theta = run_segment(theta, orders, n_steps)
+            theta = run_segment(theta, orders, n_steps=n_steps)
             rec.count(n_steps * P)   # one sample per GD step per start
 
             f_cont = np.asarray(jax.vmap(

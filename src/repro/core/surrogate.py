@@ -36,6 +36,21 @@ DIRECT_CLIP = 40.0   # sanity bound on log-latency for the DNN-only model
 
 
 def featurize(m: Mapping, layer: Layer, hw: GemminiHW) -> np.ndarray:
+    """Gemmini feature vector of one (mapping, layer, hardware) sample.
+
+    The featurization is Gemmini-only by construction: the 23 log-factor
+    features are read at the Gemmini `FREE_MASK` sites of a (2, 4, 7)
+    factor tensor and the 3 hardware features are (pe_dim, acc_kb,
+    sp_kb).  Fail loudly on any other target instead of dying deep in
+    numpy with an opaque AttributeError/IndexError."""
+    if m.f.shape != FREE_MASK.shape or not hasattr(hw, "acc_kb"):
+        raise ValueError(
+            "the latency surrogate's featurizer is Gemmini-only (log "
+            "factors at the Gemmini FREE_MASK sites + (pe_dim, acc_kb, "
+            f"sp_kb) hardware features); got a {m.f.shape} factor tensor "
+            f"and {type(hw).__name__} hardware.  Non-Gemmini ArchSpecs "
+            "run the analytical model — a per-spec feature extractor is "
+            "a ROADMAP item.")
     dims = np.log(np.asarray(layer.dims, dtype=float))
     factors = np.log(np.maximum(m.f[FREE_MASK], 1.0))
     orders = np.zeros((3, 3))

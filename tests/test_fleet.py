@@ -1,0 +1,220 @@
+"""Fleet co-search: engine-sharing across same-depth specs, per-target
+equivalence with dosa_search, and Pareto reporting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import fleet
+from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC,
+                                 engine_group_key)
+from repro.core.fleet import (FleetEntry, fleet_search, make_fleet_runner,
+                              pareto_front, spec_params)
+from repro.core.oracle import evaluate_workload
+from repro.core.problem import Layer, Workload
+from repro.core.search import SearchConfig, dosa_search
+
+ALL_SPECS = (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC)
+
+
+@pytest.fixture(scope="module")
+def portfolio() -> list[Workload]:
+    return [
+        Workload(layers=(Layer.conv(32, 64, 3, 28, name="c"),),
+                 name="convnet"),
+        Workload(layers=(Layer.matmul(256, 512, 384, name="m"),),
+                 name="gemm"),
+    ]
+
+
+@pytest.fixture(scope="module")
+def fleet_result(portfolio):
+    cfg = SearchConfig(steps=40, round_every=20, n_start_points=2, seed=3)
+    return fleet_search(portfolio, ALL_SPECS, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Engine sharing
+# ---------------------------------------------------------------------------
+
+def test_group_key_partitions_shipped_specs():
+    """TPU v5e and the edge spec share the 3-level structural group;
+    Gemmini's 4-level hierarchy is its own group."""
+    assert engine_group_key(TPU_V5E_SPEC) == engine_group_key(EDGE_SPEC)
+    assert engine_group_key(GEMMINI_SPEC) != engine_group_key(TPU_V5E_SPEC)
+    assert engine_group_key(GEMMINI_SPEC)[0] == 4
+    assert engine_group_key(EDGE_SPEC)[0] == 3
+
+
+def test_same_depth_specs_share_one_engine():
+    """The fleet engine cache must hit when a same-group spec asks for a
+    runner the other spec already built: one traced engine, two specs."""
+    wl = Workload(layers=(Layer.matmul(64, 64, 64),), name="m")
+    cfg = SearchConfig(steps=10, round_every=10, n_start_points=1, seed=0)
+    fleet._FLEET_ENGINE_CACHE.clear()
+    r_tpu = make_fleet_runner(wl, TPU_V5E_SPEC, cfg)
+    assert len(fleet._FLEET_ENGINE_CACHE) == 1
+    r_edge = make_fleet_runner(wl, EDGE_SPEC, cfg)
+    assert r_edge is r_tpu                       # cache hit, same engine
+    assert len(fleet._FLEET_ENGINE_CACHE) == 1
+    r_gem = make_fleet_runner(wl, GEMMINI_SPEC, cfg)
+    assert r_gem is not r_tpu                    # different depth group
+    assert len(fleet._FLEET_ENGINE_CACHE) == 2
+
+
+def test_fleet_search_builds_one_engine_per_group(portfolio):
+    wl = portfolio[0]
+    cfg = SearchConfig(steps=10, round_every=10, n_start_points=1, seed=1)
+    fleet._FLEET_ENGINE_CACHE.clear()
+    fleet_search(wl, ALL_SPECS, cfg)
+    # 3 specs -> 2 structural groups -> 2 cached engines.
+    assert len(fleet._FLEET_ENGINE_CACHE) == 2
+
+
+# ---------------------------------------------------------------------------
+# End-to-end results
+# ---------------------------------------------------------------------------
+
+def test_fleet_covers_portfolio_and_reevaluates(fleet_result, portfolio):
+    """One entry per (spec, workload); every best re-evaluates to its
+    reported EDP through the per-spec oracle, and energy*latency
+    composes to the EDP."""
+    assert len(fleet_result.entries) == len(ALL_SPECS) * len(portfolio)
+    for wl in portfolio:
+        for spec in ALL_SPECS:
+            e = fleet_result.entry(spec.name, wl.name)
+            assert np.isfinite(e.best_edp)
+            assert e.best_edp <= min(e.start_edps)
+            edp, _ = evaluate_workload(e.best_mappings, wl.layers,
+                                       spec=spec)
+            assert edp == pytest.approx(e.best_edp, rel=1e-6)
+            assert e.best_energy * e.best_latency == pytest.approx(
+                e.best_edp, rel=1e-4)
+            for m, layer in zip(e.best_mappings, wl.layers):
+                m.validate(np.asarray(layer.dims), spec=spec)
+
+
+def test_fleet_frontier_nondegenerate(fleet_result):
+    """The Pareto frontier over targets x workloads is non-degenerate:
+    finite, covers every workload, mutually non-dominating, and actually
+    prunes dominated targets."""
+    front = fleet_result.frontier()
+    assert 2 <= len(front) < len(fleet_result.entries)
+    assert {e.workload for e in front} == \
+        {e.workload for e in fleet_result.entries}
+    for e in front:
+        assert np.isfinite(e.best_energy) and np.isfinite(e.best_latency)
+    for wl in {e.workload for e in front}:
+        wf = [e for e in front if e.workload == wl]
+        for a in wf:
+            for b in wf:
+                assert a is b or not fleet._dominates(a, b)
+
+
+@pytest.mark.slow
+def test_fleet_matches_single_target_search(fleet_result, portfolio):
+    """Per-target equivalence: the shared parametric engine descends
+    each spec exactly as the spec-baked dosa_search engine does — same
+    seeded starts, same sample counts, same best EDP."""
+    cfg = SearchConfig(steps=40, round_every=20, n_start_points=2, seed=3)
+    wl = portfolio[1]
+    for spec in ALL_SPECS:
+        solo = dosa_search(wl, dataclasses.replace(cfg, spec=spec),
+                           population=cfg.n_start_points)
+        e = fleet_result.entry(spec.name, wl.name)
+        assert e.start_edps == solo.start_edps
+        assert e.n_evals == solo.n_evals
+        assert e.best_edp == pytest.approx(solo.best_edp, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Units: SpecParams lowering, Pareto set, config validation
+# ---------------------------------------------------------------------------
+
+def test_minimal_hw_population_spec_generic(portfolio):
+    """The population-wide minimal-hardware helper works for any spec
+    and every member's hardware supports its own mappings."""
+    from repro.core.archspec import compile_spec
+    from repro.core.hw_infer import minimal_hw_population_for
+    from repro.core.oracle import evaluate
+    from repro.core.search import generate_start_points
+
+    wl = portfolio[1]
+    for spec in (EDGE_SPEC, TPU_V5E_SPEC):
+        cspec = compile_spec(spec)
+        cfg = SearchConfig(n_start_points=2, seed=5, spec=spec)
+        starts, _, _ = generate_start_points(wl, cfg)
+        hws = minimal_hw_population_for(cspec, starts, list(wl.layers))
+        assert len(hws) == 2
+        for mappings, hw in zip(starts, hws):
+            for m, layer in zip(mappings, wl.layers):
+                r = evaluate(m, layer, hw=hw, spec=spec)
+                assert r.valid, r.reason
+
+
+def test_spec_params_lowering():
+    sp = spec_params(TPU_V5E_SPEC)
+    assert sp.pe_fixed == 1.0 and sp.pe_cap == 128.0
+    assert sp.searched.sum() == 0.0
+    assert sp.cap_fixed[1] == TPU_V5E_SPEC.levels[1].size_words
+    assert sp.cap_fixed[0] == fleet._BIG and sp.cap_fixed[2] == fleet._BIG
+    sp = spec_params(EDGE_SPEC)
+    assert sp.pe_fixed == 0.0 and sp.pe_cap == 32.0
+    assert list(sp.searched) == [0.0, 1.0, 0.0]
+    assert list(sp.bw_kind) == [2.0, 1.0, 0.0]   # linear, sqrt, const
+    sp = spec_params(GEMMINI_SPEC)
+    assert list(sp.searched) == [0.0, 1.0, 1.0, 0.0]
+    assert sp.epa_pe_scaled[1] == 1.0            # accumulator EPA model
+
+
+def _entry(spec, wl, en, lat):
+    return FleetEntry(spec_name=spec, workload=wl, best_edp=en * lat,
+                      best_energy=en, best_latency=lat, best_hw=None,
+                      best_mappings=[], n_evals=0, start_edps=[en * lat])
+
+
+def test_pareto_front_units():
+    a = _entry("a", "w", 1.0, 9.0)
+    b = _entry("b", "w", 5.0, 5.0)
+    c = _entry("c", "w", 9.0, 1.0)
+    d = _entry("d", "w", 6.0, 6.0)      # dominated by b
+    front = pareto_front([a, b, c, d])
+    assert front == [a, b, c]
+    # Frontier over two workloads unions the per-workload fronts.
+    e = _entry("a", "v", 100.0, 100.0)  # worse, but its own workload
+    res = fleet.FleetResult(entries=[a, b, c, d, e])
+    assert e in res.frontier()
+    assert d not in res.frontier()
+    assert res.frontier("w") == [a, b, c]
+
+
+def test_fleet_csv_format(fleet_result):
+    csv = fleet_result.to_csv()
+    lines = csv.strip().splitlines()
+    assert lines[0].startswith("spec,workload,edp,")
+    assert len(lines) == 1 + len(fleet_result.entries)
+    n_front = sum(int(ln.rsplit(",", 1)[1]) for ln in lines[1:])
+    assert n_front == len(fleet_result.frontier())
+
+
+def test_fleet_rejects_unsupported_configs(portfolio):
+    wl = portfolio[0]
+    with pytest.raises(ValueError, match="spec portfolio"):
+        fleet_search(wl, ALL_SPECS, SearchConfig(spec=EDGE_SPEC))
+    with pytest.raises(ValueError, match="surrogate"):
+        fleet_search(wl, ALL_SPECS, SearchConfig(surrogate=object()))
+    with pytest.raises(ValueError, match="fixed_hw"):
+        from repro.core.arch import GEMMINI_DEFAULT
+        fleet_search(wl, ALL_SPECS, SearchConfig(fixed_hw=GEMMINI_DEFAULT))
+    with pytest.raises(ValueError, match="ordering_mode"):
+        fleet_search(wl, ALL_SPECS, SearchConfig(ordering_mode="softmax"))
+    with pytest.raises(ValueError, match=">= 1"):
+        fleet_search([], ALL_SPECS, SearchConfig())
+    # Results are keyed by name: duplicates must fail fast, not silently
+    # pool distinct workloads/targets into one Pareto comparison.
+    twins = [Workload(layers=(Layer.matmul(64, 64, 64),)),
+             Workload(layers=(Layer.matmul(128, 128, 128),))]
+    with pytest.raises(ValueError, match="duplicate workload names"):
+        fleet_search(twins, ALL_SPECS, SearchConfig())
+    with pytest.raises(ValueError, match="duplicate spec names"):
+        fleet_search(wl, [EDGE_SPEC, EDGE_SPEC], SearchConfig())

@@ -1,0 +1,167 @@
+"""Spec-aware mapping generation: random_mapping / validate /
+round_mapping agree on every shipped target (property-fuzzed), and the
+seeded Gemmini draw stream is pinned bit-identical to the pre-spec
+implementation."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC,
+                                 compile_spec, sites_per_dim)
+from repro.core.hw_infer import random_hw_spec
+from repro.core.mapping import SPATIAL, Mapping, random_mapping
+from repro.core.rounding import round_mapping
+
+ALL_SPECS = (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC)
+
+_dim_vals = st.sampled_from([1, 2, 3, 5, 8, 12, 16, 56, 64, 100, 128, 224])
+
+
+@hypothesis.settings(max_examples=60, deadline=None)
+@hypothesis.given(
+    dims=st.tuples(*[_dim_vals] * 7),
+    seed=st.integers(0, 2 ** 31 - 1),
+    spec_i=st.integers(0, len(ALL_SPECS) - 1),
+)
+def test_random_mapping_valid_and_roundtrips_on_every_spec(dims, seed,
+                                                           spec_i):
+    """Property: a spec-aware random mapping (a) validates against its
+    own spec, (b) respects the spec's PE bound at the spatial sites,
+    and (c) is a fixed point of spec-aware rounding (a valid integer
+    mapping rounds to itself, site by site)."""
+    spec = ALL_SPECS[spec_i]
+    cspec = compile_spec(spec)
+    dims = np.asarray(dims)
+    m = random_mapping(dims, np.random.default_rng(seed), spec=spec)
+    m.validate(dims, spec=spec)
+    assert m.f.shape == (2, cspec.n_levels, 7)
+    assert m.f[SPATIAL].max() <= cspec.pe_cap
+    for d in range(7):                      # every factor divides its dim
+        for k in range(2):
+            for lvl in range(cspec.n_levels):
+                assert dims[d] % int(m.f[k, lvl, d]) == 0
+    r = round_mapping(m.f, m.order, dims, spec=spec)
+    np.testing.assert_array_equal(r.f, m.f)
+    np.testing.assert_array_equal(r.order, m.order)
+    r.validate(dims, spec=spec)
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    dims=st.tuples(*[_dim_vals] * 7),
+    seed=st.integers(0, 2 ** 31 - 1),
+    spec_i=st.integers(0, len(ALL_SPECS) - 1),
+)
+def test_rounding_any_continuous_point_valid_on_every_spec(dims, seed,
+                                                           spec_i):
+    """Property (Sec. 5.3.2, all targets): rounding an arbitrary
+    positive continuous factor tensor yields a mapping that passes the
+    spec-aware validator with spatial factors within the spec's cap."""
+    spec = ALL_SPECS[spec_i]
+    cspec = compile_spec(spec)
+    rng = np.random.default_rng(seed)
+    f = np.exp(rng.normal(0.0, 1.5, size=(2, cspec.n_levels, 7)))
+    m = round_mapping(f, np.zeros(cspec.n_levels, dtype=np.int64),
+                      np.asarray(dims), spec=spec)
+    m.validate(np.asarray(dims), spec=spec)
+    assert np.allclose(m.f, np.round(m.f))
+    assert m.f[SPATIAL].max() <= cspec.pe_cap
+
+
+# ---------------------------------------------------------------------------
+# Golden: the Gemmini RNG stream is unchanged by the spec-aware rewrite.
+# Captured from the pre-spec-aware implementation (hard-coded site
+# list); any reordering of the site schedule or extra RNG consumption
+# breaks these exact draws.
+# ---------------------------------------------------------------------------
+
+_GOLDEN_F0 = [[[1, 1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 64, 1, 1],
+               [1, 1, 1, 1, 1, 2, 1], [1, 1, 1, 1, 1, 1, 1]],
+              [[1, 1, 4, 28, 1, 1, 1], [1, 1, 2, 2, 1, 1, 1],
+               [3, 1, 7, 1, 1, 64, 1], [1, 3, 1, 1, 1, 1, 4]]]
+_GOLDEN_O0 = [2, 1, 0, 0]
+_GOLDEN_F1 = [[[1, 1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 16, 1, 1],
+               [1, 1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 1, 1, 1]],
+              [[1, 1, 8, 1, 1, 1, 2], [1, 3, 7, 7, 1, 8, 2],
+               [3, 1, 1, 4, 1, 16, 1], [1, 1, 1, 2, 4, 1, 1]]]
+_GOLDEN_O1 = [1, 1, 1, 0]
+_GOLDEN_F2 = [[[1, 1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 8, 1, 1],
+               [1, 1, 1, 1, 1, 8, 1], [1, 1, 1, 1, 1, 1, 1]],
+              [[1, 1, 512, 1, 1, 1, 1], [1, 1, 1, 1, 24, 64, 1],
+               [1, 1, 1, 1, 4, 2, 1], [1, 1, 1, 1, 1, 1, 1]]]
+
+
+def test_gemmini_random_mapping_draws_bit_identical():
+    dims = np.array([3, 3, 56, 56, 64, 128, 4])
+    rng = np.random.default_rng(2024)
+    m0 = random_mapping(dims, rng)
+    assert m0.f.astype(int).tolist() == _GOLDEN_F0
+    assert m0.order.tolist() == _GOLDEN_O0
+    m1 = random_mapping(dims, rng)          # stream continues identically
+    assert m1.f.astype(int).tolist() == _GOLDEN_F1
+    assert m1.order.tolist() == _GOLDEN_O1
+    # Explicit max_pe_dim still overrides the spec default.
+    dims2 = np.array([1, 1, 512, 1, 768, 1024, 1])
+    m2 = random_mapping(dims2, np.random.default_rng(7), max_pe_dim=16)
+    assert m2.f.astype(int).tolist() == _GOLDEN_F2
+    assert m2.order.tolist() == [0, 0, 0, 0]
+
+
+def test_gemmini_site_schedule_matches_legacy_order():
+    """archspec.sites_per_dim reproduces the hand-written Gemmini site
+    list random_mapping used to hard-code, dim by dim and in order."""
+    per_dim = sites_per_dim(compile_spec(GEMMINI_SPEC))
+    T, S = 1, 0
+    assert per_dim[2] == ((T, 0), (T, 1), (T, 2))       # P: reg/acc/sp
+    assert per_dim[4] == ((S, 1), (T, 1), (T, 2))       # C: spatial first
+    assert per_dim[5] == ((T, 1), (S, 2), (T, 2))       # K: spatial at SP
+    assert per_dim[0] == ((T, 1), (T, 2))               # R: no reg tiling
+
+
+# ---------------------------------------------------------------------------
+# Spec-aware validate / pe_cap defaults
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_wrong_hierarchy_and_sites():
+    dims = np.array([1, 1, 8, 1, 16, 16, 1])
+    m = random_mapping(dims, np.random.default_rng(0), spec=EDGE_SPEC)
+    m.validate(dims, spec=EDGE_SPEC)
+    with pytest.raises(ValueError, match="hierarchy"):
+        m.validate(dims)                       # 3-level f vs 4-level spec
+    bad = Mapping(f=m.f.copy(), order=m.order.copy())
+    bad.f[SPATIAL, 0, 2] = 2.0                 # P spatial: not a site
+    bad.f[1, 2, 2] /= 2.0                      # keep products intact
+    with pytest.raises(ValueError, match="dataflow sites"):
+        bad.validate(dims, spec=EDGE_SPEC)
+
+
+def test_rounding_pe_cap_defaults_to_spec():
+    """Without an explicit pe_cap, rounding bounds spatial factors at
+    the target's own PE limit, not Gemmini's 128."""
+    dims = np.array([1, 1, 8, 8, 256, 256, 1])
+    f = np.ones((2, 3, 7))
+    f[SPATIAL, 1, 4] = 200.0
+    f[SPATIAL, 1, 5] = 200.0
+    m = round_mapping(f, np.zeros(3, dtype=np.int64), dims, spec=EDGE_SPEC)
+    assert m.f[SPATIAL].max() <= EDGE_SPEC.max_pe_dim          # 32
+    f4 = np.ones((2, 4, 7))
+    f4[SPATIAL, 1, 4] = 200.0
+    m4 = round_mapping(f4, np.zeros(4, dtype=np.int64), dims)
+    assert m4.f[SPATIAL].max() <= 128                          # Gemmini
+
+
+def test_random_hw_shares_spec_pe_cap():
+    """A random-start PE range wider than the spec cap is clamped to
+    the cap (the same bound rounding and random_mapping use)."""
+    wide = dataclasses.replace(EDGE_SPEC, name="edge_wide",
+                               rand_pe_log2=(2, 10))
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        hw = random_hw_spec(rng, spec=wide)
+        assert hw.pe_dim <= wide.max_pe_dim
+    # Fixed silicon always pins the side.
+    hw = random_hw_spec(np.random.default_rng(1), spec=TPU_V5E_SPEC)
+    assert hw.pe_dim == TPU_V5E_SPEC.fixed_pe_dim

@@ -46,6 +46,22 @@ def test_featurize_shape():
     assert np.isfinite(f).all()
 
 
+def test_featurize_rejects_non_gemmini_targets():
+    """Regression: a non-Gemmini spec (3-level factor tensor, HWConfig
+    without acc_kb/sp_kb) used to die deep in numpy with an opaque
+    AttributeError; it must raise a ValueError naming the limitation."""
+    from repro.core.archspec import EDGE_SPEC, HWConfig
+    layer = alexnet().layers[2]
+    m3 = random_mapping(np.asarray(layer.dims), np.random.default_rng(2),
+                        spec=EDGE_SPEC)
+    with pytest.raises(ValueError, match="Gemmini-only"):
+        featurize(m3, layer, HWConfig(pe_dim=16, cap_kb=(256.0,)))
+    # A Gemmini-shaped mapping with non-Gemmini hardware also fails loud.
+    m4 = random_mapping(np.asarray(layer.dims), np.random.default_rng(2))
+    with pytest.raises(ValueError, match="Gemmini-only"):
+        featurize(m4, layer, HWConfig(pe_dim=16, cap_kb=(8.0, 64.0)))
+
+
 def test_spearman_basics():
     a = np.arange(100.0)
     assert spearman(a, a) == pytest.approx(1.0)
