@@ -5,13 +5,13 @@ Paper: at ~10k model evaluations DOSA beats random search by 2.80x and
 BO by 12.59x (geomean EDP).
 
 Also times the batched multi-start engine (`dosa_search(...,
-population=P)`) against the sequential reference driver: per workload
-at the protocol's start-point count, plus a dedicated P=8 row on unet
-measuring steady-state throughput (engines pre-warmed so the row
-compares execution, not one-time XLA compiles)."""
+population=P)`, the fused device-resident engine by default) against
+the sequential reference driver: per workload at the protocol's
+start-point count, plus a dedicated P=8 row on unet measuring
+steady-state throughput (engines pre-warmed so the row compares
+execution, not one-time XLA compiles).  `benchmarks/timing.py` breaks
+the engine comparison down per stage."""
 from __future__ import annotations
-
-import dataclasses
 
 from repro.core.baselines import bayes_opt, random_search
 from repro.core.search import SearchConfig, dosa_search
@@ -79,12 +79,11 @@ def run(scale: str = "quick") -> list[Row]:
     # one-segment run so both sides measure steady-state throughput.
     wl = dnn_zoo.get_workload(WORKLOADS[0])
     cfg8 = SearchConfig(seed=11, **{**cfg_kw, "n_start_points": MULTISTART_P})
-    # The scan is compiled per distinct segment length, so the warm-up
-    # must cover both the full `round_every` segment and any remainder
-    # segment (e.g. paper scale 1490/500 -> lengths 500 and 490).
-    warm_steps = cfg8.round_every + cfg8.steps % cfg8.round_every
-    dosa_search(wl, dataclasses.replace(cfg8, steps=warm_steps),
-                population=MULTISTART_P)
+    # The fused engine compiles one program per (population, segment
+    # schedule), so the warm-up must run the exact timed configuration
+    # once to cover it (and, with it, every distinct segment length of
+    # the host engines).
+    dosa_search(wl, cfg8, population=MULTISTART_P)
     with Timer() as t_seq8:
         res_seq8 = dosa_search(wl, cfg8)
     with Timer() as t_bat8:

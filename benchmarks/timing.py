@@ -1,0 +1,197 @@
+"""Wall-clock timing of the search engines (the device-resident
+one-loop claim, measured).
+
+Compares, at a fixed population and step budget on unet:
+
+* the *sequential* reference driver (one jitted Adam step per call),
+* the *host-batched* engine (one device program per GD segment,
+  rounding / ordering re-selection / theta rebuild on the host between
+  segments),
+* the *fused* device-resident engine (ONE compiled program for the
+  whole segment loop; the host touches start points and the final
+  read-back only),
+
+plus per-stage micro-timings (GD segment, host vs device rounding,
+ordering re-selection, population oracle evaluation) that show where
+the host-batched loop spends its between-segment time.
+
+The engine loop timings run with a stub latency model so the oracle
+(identical work in every engine, off the device critical path) does not
+dilute the comparison; end-to-end timings with the real oracle are
+reported alongside.  All engines are pre-warmed at the measured shapes,
+so the rows compare steady-state execution, not XLA compiles.
+
+Gates (benchmarks.run exits non-zero on failure):
+* the fused loop is no slower than the host-batched loop,
+* fused and host-batched report identical best EDP and sample counts
+  (the seeded divisor-grid equivalence contract).
+
+Writes ``bench_results/search_timing.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.rounding import round_population, round_population_device
+from repro.core.search import (SearchConfig, dosa_search,
+                               generate_start_points,
+                               make_population_runner,
+                               orders_from_population,
+                               select_orderings_population_spec,
+                               theta_from_population, _cspec, _segment_lengths)
+from repro.workloads import dnn_zoo
+
+from .common import Row, Timer, save_json
+
+POPULATION = 8
+WORKLOAD = "unet"
+
+
+def _stub_latency(mappings, workload):
+    return 1.0
+
+
+def _stage_timings(wl, cfg, cspec) -> dict:
+    """Micro-time the host-batched loop's stages at the engine's
+    population shape: one GD segment, host vs device rounding, ordering
+    re-selection, and the per-candidate oracle."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.model import infer_hw_population_spec
+    from repro.core.oracle import evaluate_workload
+    from repro.core.search import build_f
+
+    run_segment, dims_j, strides_j, repeats_j = \
+        make_population_runner(wl, cfg)
+    starts, _, _ = generate_start_points(wl, cfg)
+    dims = wl.dims_array()
+    strides = wl.strides_array().astype(float)
+    repeats = wl.repeats_array().astype(float)
+    theta_np = theta_from_population(starts, cspec.free_mask)
+    orders_np = orders_from_population(starts)
+    orders = jnp.asarray(orders_np)
+
+    # warm every stage (run_segment donates theta: fresh buffer per call)
+    theta = run_segment(jnp.asarray(theta_np, dtype=jnp.float32), orders,
+                        n_steps=cfg.round_every)
+    f_cont = np.asarray(jax.vmap(
+        lambda th: build_f(th, dims_j, cspec.free_mask_j))(theta))
+    rounded = round_population(f_cont, orders_np, dims, spec=cspec)
+    round_population_device(f_cont, dims, spec=cspec)
+    from repro.core.mapping import stack_mappings
+    fs_pop = np.stack([stack_mappings(ms)[0] for ms in rounded])
+    hws = infer_hw_population_spec(cspec, jnp.asarray(fs_pop),
+                                   jnp.asarray(strides))
+    select_orderings_population_spec(cspec, fs_pop, strides, repeats, hws)
+
+    reps = 3
+    with Timer() as t_gd:
+        for _ in range(reps):
+            run_segment(jnp.asarray(theta_np, dtype=jnp.float32), orders,
+                        n_steps=cfg.round_every).block_until_ready()
+    with Timer() as t_rh:
+        for _ in range(reps):
+            round_population(f_cont, orders_np, dims, spec=cspec)
+    with Timer() as t_rd:
+        for _ in range(reps):
+            round_population_device(f_cont, dims, spec=cspec)
+    with Timer() as t_ord:
+        for _ in range(reps):
+            select_orderings_population_spec(cspec, fs_pop, strides,
+                                             repeats, hws)
+    with Timer() as t_orc:
+        for _ in range(reps):
+            for ms in rounded:
+                evaluate_workload(ms, wl.layers, spec=cspec)
+    return {
+        "gd_segment_s": t_gd.seconds / reps,
+        "rounding_host_s": t_rh.seconds / reps,
+        "rounding_device_s": t_rd.seconds / reps,
+        "ordering_s": t_ord.seconds / reps,
+        "oracle_population_s": t_orc.seconds / reps,
+    }
+
+
+def run(scale: str = "quick") -> list[Row]:
+    if scale == "paper":
+        steps, round_every = 1490, 500
+    else:
+        steps, round_every = 160, 40
+    wl = dnn_zoo.get_workload(WORKLOAD)
+    cfg = SearchConfig(seed=11, steps=steps, round_every=round_every,
+                       n_start_points=POPULATION)
+    cfg_stub = dataclasses.replace(cfg, latency_model=_stub_latency)
+    cspec = _cspec(cfg)
+
+    # ---- warm every engine at the measured shapes (population size and
+    # segment schedule are part of the compiled programs).
+    dosa_search(wl, dataclasses.replace(cfg_stub, n_start_points=1))
+    dosa_search(wl, cfg_stub, population=POPULATION, fused=False)
+    dosa_search(wl, cfg_stub, population=POPULATION, fused=True)
+
+    # ---- engine loop timings (stub oracle: GD + rounding + ordering).
+    with Timer() as t_seq:
+        res_seq = dosa_search(wl, cfg_stub)
+    with Timer() as t_host:
+        res_host = dosa_search(wl, cfg_stub, population=POPULATION,
+                               fused=False)
+    with Timer() as t_fused:
+        res_fused = dosa_search(wl, cfg_stub, population=POPULATION,
+                                fused=True)
+    assert res_fused.n_evals == res_host.n_evals == res_seq.n_evals, \
+        "engines disagree on sample accounting"
+
+    # ---- end-to-end with the real oracle (identical extra work).
+    with Timer() as t_host_e2e:
+        r_host = dosa_search(wl, cfg, population=POPULATION, fused=False)
+    with Timer() as t_fused_e2e:
+        r_fused = dosa_search(wl, cfg, population=POPULATION, fused=True)
+    assert r_fused.best_edp == r_host.best_edp \
+        and r_fused.n_evals == r_host.n_evals, (
+        "fused engine must be seeded-identical to the host-batched "
+        f"reference: {r_fused.best_edp} vs {r_host.best_edp}")
+
+    stages = _stage_timings(wl, cfg_stub, cspec)
+    loop_speedup = t_host.seconds / t_fused.seconds
+    payload = {
+        "scale": scale, "workload": WORKLOAD, "population": POPULATION,
+        "steps": steps, "round_every": round_every,
+        "n_segments": len(_segment_lengths(steps, round_every)),
+        "stages_s": stages,
+        "loop_s": {"sequential": t_seq.seconds,
+                   "host_batched": t_host.seconds,
+                   "fused": t_fused.seconds},
+        "end_to_end_s": {"host_batched": t_host_e2e.seconds,
+                         "fused": t_fused_e2e.seconds},
+        "fused_vs_host_batched_loop_speedup": loop_speedup,
+        "fused_vs_sequential_loop_speedup":
+            t_seq.seconds / t_fused.seconds,
+        "best_edp": r_fused.best_edp, "n_evals": r_fused.n_evals,
+    }
+    save_json("search_timing", payload)
+
+    # Gate: the fused loop must not be slower than the host-batched loop
+    # (small tolerance for shared-runner timing noise).
+    assert t_fused.seconds <= t_host.seconds * 1.05, (
+        f"fused loop ({t_fused.seconds:.2f}s) slower than host-batched "
+        f"({t_host.seconds:.2f}s)")
+
+    return [
+        Row("timing_loop_sequential", t_seq.seconds * 1e6,
+            f"loop_s={t_seq.seconds:.2f} evals={res_seq.n_evals}"),
+        Row("timing_loop_host_batched", t_host.seconds * 1e6,
+            f"loop_s={t_host.seconds:.2f} evals={res_host.n_evals}"),
+        Row("timing_loop_fused", t_fused.seconds * 1e6,
+            f"loop_s={t_fused.seconds:.2f} "
+            f"speedup_vs_host={loop_speedup:.2f}x "
+            f"speedup_vs_seq={t_seq.seconds / t_fused.seconds:.2f}x"),
+        Row("timing_stages", 0.0,
+            " ".join(f"{k}={v:.3f}" for k, v in stages.items())),
+        Row("timing_end_to_end", t_fused_e2e.seconds * 1e6,
+            f"fused_s={t_fused_e2e.seconds:.2f} "
+            f"host_s={t_host_e2e.seconds:.2f} "
+            f"edp={r_fused.best_edp:.4e}"),
+    ]

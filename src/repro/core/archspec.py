@@ -258,6 +258,14 @@ class CompiledSpec:
         spatial cap for rounding, random mappings and random hardware."""
         return int(self.spec.fixed_pe_dim or self.spec.max_pe_dim)
 
+    def divisor_tables(self, dims) -> tuple[np.ndarray, np.ndarray]:
+        """Padded per-(layer, dim) divisor tables for device-resident
+        rounding against this spec's site schedule: (divs (L, 7, D)
+        int32, logs (L, 7, D) float32).  See `padded_divisor_tables`;
+        the tables depend only on the problem dims and are shared
+        across specs via the module-level cache."""
+        return padded_divisor_tables(dims)
+
     # -- hardware-point conversions ------------------------------------
 
     def hw_kbs(self, hw) -> tuple[float, ...]:
@@ -326,6 +334,47 @@ class CompiledSpec:
             else:
                 out.append(bw.coeff)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Padded divisor tables (device-resident rounding, Sec. 5.3.2)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _padded_divisor_tables(dims_key: tuple) -> tuple[np.ndarray, np.ndarray]:
+    """(divs, logs) for a workload's (L, 7) problem dims, padded to the
+    widest divisor count D with zeros:
+
+    * ``divs`` (L, 7, D) int32 — sorted divisors of ``dims[l, d]``
+      (ascending, zero-padded); every integer factor a valid mapping can
+      hold at any site is a divisor of its dim, so these tables are the
+      complete search alphabet of the rounding projection;
+    * ``logs`` (L, 7, D) float32 — ``log(divs)`` computed in float64 and
+      rounded once to float32, exactly the value
+      ``theta_from_mappings`` produces for that factor, so a device
+      engine can rebuild post-rounding log-factors by table gather
+      instead of a float32 ``log`` (bit-identical carry either way).
+
+    Cached by the dims tuple: every engine for the same workload (and
+    every spec — divisors depend only on the problem) shares one table.
+    """
+    from .problem import divisors
+    dims = np.asarray(dims_key, dtype=np.int64)
+    div_lists = [[divisors(int(n)) for n in row] for row in dims]
+    width = max(len(ds) for row in div_lists for ds in row)
+    divs = np.zeros(dims.shape + (width,), dtype=np.int32)
+    for li, row in enumerate(div_lists):
+        for di, ds in enumerate(row):
+            divs[li, di, :len(ds)] = ds
+    logs = np.log(np.maximum(divs, 1).astype(np.float64)).astype(np.float32)
+    return _readonly(divs), _readonly(logs)
+
+
+def padded_divisor_tables(dims) -> tuple[np.ndarray, np.ndarray]:
+    """Public cached entry point: dims (L, 7) ints -> (divs, logs)."""
+    dims = np.asarray(dims, dtype=np.int64)
+    return _padded_divisor_tables(tuple(tuple(int(x) for x in row)
+                                        for row in dims))
 
 
 @functools.lru_cache(maxsize=None)

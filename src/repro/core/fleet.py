@@ -33,6 +33,7 @@ stays exactly 0.0 rather than NaN.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Iterable, NamedTuple
 
 import jax
@@ -41,14 +42,18 @@ import numpy as np
 
 from .archspec import (ArchSpec, CompiledSpec, engine_group_key,
                        resolve_spec)
-from .mapping import Mapping, stack_mappings
+from .mapping import Mapping, stack_mappings, unstack_mappings
 from .model import (SpecHW, capacities, infer_hw_population_spec,
-                    layer_c_pe_spec, traffic_spec, utilized_pes,
+                    layer_c_pe_spec, layer_el_all_orderings_population_spec,
+                    population_best_init, population_best_update,
+                    population_edp_spec, traffic_spec, utilized_pes,
                     validity_penalty)
 from .oracle import evaluate_workload
 from .problem import Workload
-from .rounding import round_population
-from .search import (_Recorder, _generate_start_point, _segment_lengths,
+from .rounding import (round_population, rounding_tables,
+                       _round_population_core)
+from .search import (_Recorder, _adam_scan, _cd_orderings,
+                     _generate_start_point, _segment_lengths,
                      _spatial_cap_penalty, SearchConfig, build_f,
                      make_segment_runner, orders_from_population,
                      select_orderings_population_spec,
@@ -189,6 +194,42 @@ def fleet_engine_key(workload: Workload, spec, cfg: SearchConfig) -> tuple:
     return (workload, engine_group_key(spec), cfg.lr, cfg.penalty_weight)
 
 
+def _fleet_loss_fn(workload: Workload, group: CompiledSpec,
+                   cfg: SearchConfig):
+    """The member-parametric GD loss shared by the segment-runner and
+    fused fleet engines: `loss(theta, orders, sp)` evaluates one
+    member's log-EDP + penalties under its own `SpecParams`."""
+    dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
+    strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
+    repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
+    free_mask_j = group.free_mask_j
+    sites = group.spatial_sites
+    b_mat = jnp.asarray(group.b_matrix, dtype=jnp.float32)
+    caps_b = jax.vmap(capacities)
+    penalty_weight = cfg.penalty_weight
+
+    def loss(theta, orders, sp: SpecParams):
+        f = build_f(theta, dims, free_mask_j)
+        edp = member_edp(group, sp, f, orders, strides, repeats)
+        pen = validity_penalty(f) \
+            + _spatial_cap_penalty(f, sp.pe_cap, sites)
+        # Fixed-silicon capacity overflow (e.g. TPU VMEM): unconstrained
+        # and searched levels carry the _BIG sentinel => zero penalty.
+        req = jnp.sum(caps_b(f, strides) * b_mat[None], axis=2)
+        pen = pen + jnp.sum(jnp.maximum(req / sp.cap_fixed[None] - 1.0,
+                                        0.0))
+        return jnp.log(edp) + penalty_weight * pen
+
+    return loss
+
+
+def _fleet_cache_put(key, value):
+    if len(_FLEET_ENGINE_CACHE) >= _FLEET_ENGINE_CACHE_MAX:
+        _FLEET_ENGINE_CACHE.pop(next(iter(_FLEET_ENGINE_CACHE)))
+    _FLEET_ENGINE_CACHE[key] = value
+    return value
+
+
 def make_fleet_runner(workload: Workload, spec, cfg: SearchConfig):
     """Build (or fetch from cache) the fleet GD engine for `spec`'s
     structural group: a jitted ``run_segment(theta, orders, params,
@@ -204,36 +245,98 @@ def make_fleet_runner(workload: Workload, spec, cfg: SearchConfig):
         return hit
 
     group = resolve_spec(spec)       # structural representative
-    dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
-    strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
-    repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
-    free_mask_j = group.free_mask_j
-    sites = group.spatial_sites
-    b_mat = jnp.asarray(group.b_matrix, dtype=jnp.float32)
-    caps_b = jax.vmap(capacities)
-    lr, penalty_weight = cfg.lr, cfg.penalty_weight
-
-    def loss(theta, orders, sp: SpecParams):
-        f = build_f(theta, dims, free_mask_j)
-        edp = member_edp(group, sp, f, orders, strides, repeats)
-        pen = validity_penalty(f) \
-            + _spatial_cap_penalty(f, sp.pe_cap, sites)
-        # Fixed-silicon capacity overflow (e.g. TPU VMEM): unconstrained
-        # and searched levels carry the _BIG sentinel => zero penalty.
-        req = jnp.sum(caps_b(f, strides) * b_mat[None], axis=2)
-        pen = pen + jnp.sum(jnp.maximum(req / sp.cap_fixed[None] - 1.0,
-                                        0.0))
-        return jnp.log(edp) + penalty_weight * pen
-
+    loss = _fleet_loss_fn(workload, group, cfg)
     pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0, 0))
     # run_segment(theta, orders, params, n_steps=...) — the shared Adam
     # scan executor, with the per-member spec tables as the extra arg.
-    run_segment = make_segment_runner(pop_grad, lr)
+    return _fleet_cache_put(key, make_segment_runner(pop_grad, cfg.lr))
 
-    if len(_FLEET_ENGINE_CACHE) >= _FLEET_ENGINE_CACHE_MAX:
-        _FLEET_ENGINE_CACHE.pop(next(iter(_FLEET_ENGINE_CACHE)))
-    _FLEET_ENGINE_CACHE[key] = run_segment
-    return run_segment
+
+def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
+                            cfg: SearchConfig):
+    """Device-resident fleet engine for one structural group: the
+    single-target fused scan (`search.make_fused_runner`) lifted to a
+    stacked member axis.  The GD sub-scan runs the shared parametric
+    loss (numeric spec tables as traced per-member `SpecParams`), while
+    rounding and ordering re-selection unroll over the group's per-spec
+    member spans — each span projected and re-ordered by its own
+    compiled spec, exactly as the host-batched fleet path does — so
+    per-member `SpecParams` and populations never leave the device
+    between segments.  Cached per (workload, spec tuple, start count,
+    traced-config fields)."""
+    key = (workload, "fused", tuple(specs), cfg.n_start_points, cfg.lr,
+           cfg.penalty_weight, cfg.ordering_mode)
+    hit = _FLEET_ENGINE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    group = resolve_spec(specs[0])
+    cspecs = [resolve_spec(s) for s in specs]
+    n = cfg.n_start_points
+    spans = [(i * n, (i + 1) * n) for i in range(len(specs))]
+    strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
+    repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
+    dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
+    tables = rounding_tables(workload.dims_array())
+    free_mask_j = group.free_mask_j
+    combos = jnp.asarray(group.combos)
+    reselect = cfg.ordering_mode == "iterative"
+
+    loss = _fleet_loss_fn(workload, group, cfg)
+    pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0, 0))
+
+    def segment(theta, orders, sp_stack, best, n_steps: int):
+        theta = _adam_scan(pop_grad, cfg.lr, theta, (orders, sp_stack),
+                           n_steps)
+        f_cont = jax.vmap(lambda th: build_f(th, dims, free_mask_j))(theta)
+        f_parts, th_parts, o_parts, edp_parts = [], [], [], []
+        for cspec, (a, b) in zip(cspecs, spans):
+            f_r, th_r = _round_population_core(cspec, tables,
+                                               f_cont[a:b], cspec.pe_cap)
+            if reselect:
+                hws = infer_hw_population_spec(cspec, f_r, strides)
+                e, l = layer_el_all_orderings_population_spec(
+                    cspec, f_r, strides, hws)
+                rep = repeats[None, :, None]
+                choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
+                o_r = combos[choice]
+            else:
+                o_r = orders[a:b]
+            edp_parts.append(population_edp_spec(cspec, f_r, o_r, strides,
+                                                 repeats))
+            f_parts.append(f_r)
+            th_parts.append(th_r)
+            o_parts.append(o_r)
+        f_round = jnp.concatenate(f_parts)
+        theta = jnp.concatenate(th_parts)
+        orders = jnp.concatenate(o_parts)
+        edp = jnp.concatenate(edp_parts)
+        best = population_best_update(best, edp, f_round, orders)
+        return theta, orders, best, (f_round, orders, edp)
+
+    @partial(jax.jit, static_argnames=("n_full", "rem", "seg_len"),
+             donate_argnums=(0, 1))
+    def run_fused(theta, orders, sp_stack, *, n_full: int, rem: int,
+                  seg_len: int):
+        best = population_best_init(theta, orders)
+        ys = None
+        if n_full:
+            def body(carry, _):
+                theta, orders, best = carry
+                theta, orders, best, out = segment(theta, orders, sp_stack,
+                                                   best, seg_len)
+                return (theta, orders, best), out
+            (theta, orders, best), ys = jax.lax.scan(
+                body, (theta, orders, best), None, length=n_full)
+        if rem:
+            theta, orders, best, out = segment(theta, orders, sp_stack,
+                                               best, rem)
+            tail = jax.tree_util.tree_map(lambda x: x[None], out)
+            ys = tail if ys is None else jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]), ys, tail)
+        return ys, best
+
+    return _fleet_cache_put(key, run_fused)
 
 
 # ---------------------------------------------------------------------------
@@ -340,12 +443,19 @@ def _check_cfg(cfg: SearchConfig) -> None:
 
 
 def _search_group(workload: Workload, specs: list[ArchSpec],
-                  cfg: SearchConfig) -> list[FleetEntry]:
+                  cfg: SearchConfig,
+                  fused: bool = True) -> list[FleetEntry]:
     """Co-search one structural group: every spec's start population is
-    stacked into one member axis and advanced by the shared engine;
-    rounding / ordering re-selection / oracle accounting run per spec
-    between GD segments (the dosa_search batched protocol, per spec)."""
-    run_segment = make_fleet_runner(workload, specs[0], cfg)
+    stacked into one member axis and advanced by the shared engine.
+    With `fused=True` (default) the whole segment loop runs as ONE
+    device program per group (`make_fused_fleet_runner`) and the host
+    replays rounding-point oracle accounting from the final read-back;
+    with `fused=False` rounding / ordering re-selection / oracle
+    accounting run per spec between GD segments on the host (the
+    dosa_search host-batched protocol, per spec — the seeded-equivalence
+    reference)."""
+    run_segment = None if fused else make_fleet_runner(workload, specs[0],
+                                                       cfg)
     group = resolve_spec(specs[0])
     dims = workload.dims_array()
     dims_j = jnp.asarray(dims, dtype=jnp.float32)
@@ -387,32 +497,53 @@ def _search_group(workload: Workload, specs: list[ArchSpec],
     theta = jnp.asarray(np.concatenate(thetas), dtype=jnp.float32)
     orders = jnp.asarray(np.concatenate(orders_np))
     sp_stack = stack_spec_params(params)
+    seg_lens = _segment_lengths(cfg.steps, cfg.round_every)
 
-    for n_steps in _segment_lengths(cfg.steps, cfg.round_every):
-        theta = run_segment(theta, orders, sp_stack, n_steps=n_steps)
-        f_cont = np.asarray(jax.vmap(
-            lambda th: build_f(th, dims_j, free_mask_j))(theta))
-        orders_host = np.asarray(orders)
-        new_thetas, new_orders = [], []
-        for cspec, rec, (a, b) in zip(cspecs, recs, spans):
-            rec.count(n_steps * (b - a))
-            rounded = round_population(f_cont[a:b], orders_host[a:b], dims,
-                                       spec=cspec)
-            if cfg.ordering_mode == "iterative":
-                fs_pop = np.stack([stack_mappings(ms)[0] for ms in rounded])
-                hws = infer_hw_population_spec(
-                    cspec, jnp.asarray(fs_pop), jnp.asarray(strides))
-                sel = select_orderings_population_spec(
-                    cspec, fs_pop, strides, repeats, hws)
-                for ms, no in zip(rounded, sel):
-                    for mp, o in zip(ms, no):
-                        mp.order = o
-            for ms in rounded:
-                rec.record(ms)
-            new_thetas.append(theta_from_population(rounded, cspec.free_mask))
-            new_orders.append(orders_from_population(rounded))
-        theta = jnp.asarray(np.concatenate(new_thetas), dtype=jnp.float32)
-        orders = jnp.asarray(np.concatenate(new_orders))
+    if fused and seg_lens:
+        # ---- ONE device program for the whole group's segment loop;
+        # oracle accounting replays from the final read-back in the
+        # host-batched order (per segment, per spec, per member).
+        run_fused = make_fused_fleet_runner(workload, specs, cfg)
+        n_full, rem = divmod(cfg.steps, cfg.round_every)
+        (f_seg, o_seg, _), _best = run_fused(
+            theta, orders, sp_stack, n_full=n_full, rem=rem,
+            seg_len=cfg.round_every)
+        f_seg = np.asarray(f_seg, dtype=float)
+        o_seg = np.asarray(o_seg)
+        for s, n_steps in enumerate(seg_lens):
+            for cspec, rec, (a, b) in zip(cspecs, recs, spans):
+                rec.count(n_steps * (b - a))
+                for p in range(a, b):
+                    rec.record(unstack_mappings(f_seg[s, p], o_seg[s, p]))
+    else:
+        for n_steps in seg_lens:
+            theta = run_segment(theta, orders, sp_stack, n_steps=n_steps)
+            f_cont = np.asarray(jax.vmap(
+                lambda th: build_f(th, dims_j, free_mask_j))(theta))
+            orders_host = np.asarray(orders)
+            new_thetas, new_orders = [], []
+            for cspec, rec, (a, b) in zip(cspecs, recs, spans):
+                rec.count(n_steps * (b - a))
+                rounded = round_population(f_cont[a:b], orders_host[a:b],
+                                           dims, spec=cspec)
+                if cfg.ordering_mode == "iterative":
+                    fs_pop = np.stack([stack_mappings(ms)[0]
+                                       for ms in rounded])
+                    hws = infer_hw_population_spec(
+                        cspec, jnp.asarray(fs_pop), jnp.asarray(strides))
+                    sel = select_orderings_population_spec(
+                        cspec, fs_pop, strides, repeats, hws)
+                    for ms, no in zip(rounded, sel):
+                        for mp, o in zip(ms, no):
+                            mp.order = o
+                for ms in rounded:
+                    rec.record(ms)
+                new_thetas.append(
+                    theta_from_population(rounded, cspec.free_mask))
+                new_orders.append(orders_from_population(rounded))
+            theta = jnp.asarray(np.concatenate(new_thetas),
+                                dtype=jnp.float32)
+            orders = jnp.asarray(np.concatenate(new_orders))
 
     entries = []
     for spec, cspec, rec in zip(specs, cspecs, recs):
@@ -437,15 +568,20 @@ def _search_group(workload: Workload, specs: list[ArchSpec],
 
 def fleet_search(workloads: Workload | Iterable[Workload],
                  specs: ArchSpec | Iterable[ArchSpec],
-                 cfg: SearchConfig | None = None) -> FleetResult:
+                 cfg: SearchConfig | None = None,
+                 fused: bool = True) -> FleetResult:
     """Co-search a workload portfolio across a set of ArchSpec targets
     in one run.
 
     Specs are grouped by `engine_group_key`; each group's populations
     batch into one shared scan/vmap engine (numeric spec tables as
     traced per-member parameters), different groups run as separate
-    cached engines.  Returns a `FleetResult` of per-(spec, workload)
-    bests and the Pareto frontier over targets x workloads."""
+    cached engines.  `fused=True` (default) runs each group's whole
+    segment loop device-resident — per-member `SpecParams` never leave
+    the device; `fused=False` is the host-batched reference (one device
+    program per GD segment, rounding/ordering on the host).  Returns a
+    `FleetResult` of per-(spec, workload) bests and the Pareto frontier
+    over targets x workloads."""
     cfg = SearchConfig() if cfg is None else cfg
     _check_cfg(cfg)
     if isinstance(workloads, Workload):
@@ -473,7 +609,8 @@ def fleet_search(workloads: Workload | Iterable[Workload],
         for spec in specs:
             groups.setdefault(engine_group_key(spec), []).append(spec)
         for group_specs in groups.values():
-            entries.extend(_search_group(workload, group_specs, cfg))
+            entries.extend(_search_group(workload, group_specs, cfg,
+                                         fused=fused))
     # Entry order: workload-major, then the caller's spec order.
     order = {(s.name, w.name): i for i, (w, s) in enumerate(
         (w, s) for w in workloads for s in specs)}

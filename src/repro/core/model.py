@@ -417,6 +417,40 @@ def population_edp(fs, orders, strides, repeats,
     return population_eval(fs, orders, strides, repeats, hw=hw)[0]
 
 
+class PopulationBest(NamedTuple):
+    """Per-member running best of a population search, carried through a
+    device-resident scan (the fused engine's best-EDP tracking): the
+    lowest model EDP seen so far plus the candidate that achieved it."""
+
+    edp: jnp.ndarray      # (P,) best model EDP per member
+    f: jnp.ndarray        # (P, L, 2, n_levels, 7) best factor tensors
+    orders: jnp.ndarray   # (P, L, n_levels) best ordering choices
+
+
+def population_best_init(f: jnp.ndarray,
+                         orders: jnp.ndarray) -> PopulationBest:
+    """Empty best-tracking state shaped like one population candidate
+    (+inf EDP, so the first update always takes)."""
+    return PopulationBest(edp=jnp.full(f.shape[0], jnp.inf, dtype=f.dtype),
+                          f=jnp.zeros_like(f),
+                          orders=jnp.zeros_like(orders))
+
+
+def population_best_update(best: PopulationBest, edp: jnp.ndarray,
+                           f: jnp.ndarray,
+                           orders: jnp.ndarray) -> PopulationBest:
+    """Elementwise best-EDP tracking: keep each member's incumbent
+    unless the new candidate strictly improves it.  Pure/jittable — the
+    fused engine folds this over its rounding points so the running
+    best lives on device for the whole search."""
+    take = edp < best.edp                                  # (P,)
+    sel = lambda new, old, t: jnp.where(
+        t.reshape(t.shape + (1,) * (new.ndim - 1)), new, old)
+    return PopulationBest(edp=jnp.where(take, edp, best.edp),
+                          f=sel(f, best.f, take),
+                          orders=sel(orders, best.orders, take))
+
+
 # ---------------------------------------------------------------------------
 # Validity penalty (Eq. 18) and fixed-hardware capacity penalties
 # ---------------------------------------------------------------------------

@@ -15,13 +15,29 @@ inferred backing-store factor (Sec. 5.3.3) is a positive integer.
 The site schedule (which (spatial|temporal, level) pairs may hold a
 factor of each dim, innermost first) is derived from the target's
 `CompiledSpec`; the default is Gemmini.
+
+Two implementations share the projection semantics:
+
+* the host reference (`round_mapping` / `round_all` /
+  `round_population`): numpy loops producing `Mapping` objects;
+* the device projection (`round_population_device`, built on
+  `_round_population_core`): a pure jittable function over precomputed
+  padded divisor tables (`archspec.padded_divisor_tables`), the
+  rounding stage of the fused device-resident search engine.  Instead
+  of recomputing divisors of the *remaining* quotient, it masks the
+  full dim's divisor table by remaining-divisibility (an identical set,
+  since the remaining quotient always divides the dim) and takes the
+  first nearest divisor — the same innermost->outermost
+  running-quotient capping, exact integer arithmetic in int32.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import numpy as np
 
+from .archspec import padded_divisor_tables
 from .archspec import sites_per_dim as _sites_per_dim
 from .archspec import resolve_spec
 from .mapping import SPATIAL, TEMPORAL, Mapping
@@ -91,3 +107,111 @@ def round_population(fs: np.ndarray, orders: np.ndarray, dims: np.ndarray,
     dims)."""
     return [round_all(fs[p], orders[p], dims, pe_cap=pe_cap, spec=spec)
             for p in range(fs.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident projection (the fused engine's rounding stage)
+# ---------------------------------------------------------------------------
+
+class RoundingTables(NamedTuple):
+    """Static constants the device projection closes over: padded
+    divisor tables plus the integer problem dims.  Plain numpy — they
+    become jit-trace constants when captured by an engine."""
+
+    divs: np.ndarray   # (L, 7, D) int32, ascending, zero-padded
+    logs: np.ndarray   # (L, 7, D) float32, log of divs (0 at padding)
+    dims: np.ndarray   # (L, 7) int32
+
+
+def rounding_tables(dims) -> RoundingTables:
+    """Build (cached) divisor tables for a workload's dims.  Divisors
+    depend only on the problem, so every spec's engine for the same
+    workload shares one table set."""
+    divs, logs = padded_divisor_tables(dims)
+    return RoundingTables(divs=divs, logs=logs,
+                          dims=np.asarray(dims, dtype=np.int32))
+
+
+def _round_population_core(cspec, tables: RoundingTables, f, pe_cap):
+    """Pure jittable nearest-divisor projection of a whole population.
+
+    f: (P, L, 2, n_levels, 7) continuous factors (traced); pe_cap: the
+    spatial bound — a Python scalar (single-target engines) or a traced
+    (P,) per-member array (fleet engines).  Returns (f_rounded, theta):
+    the integer factor tensor and the matching free-site log-factors
+    (gathered from the float32 log table, so the GD carry is
+    bit-identical to `theta_from_population` of the rounded mappings).
+
+    Mirrors `round_mapping` exactly: per dim, innermost->outermost over
+    the spec's site schedule, each site taking the divisor of the
+    remaining quotient nearest its continuous factor (ties to the
+    smaller divisor), spatial sites additionally capped at `pe_cap`;
+    the backing-store temporal factor absorbs the remainder.
+    """
+    import jax.numpy as jnp
+
+    per_dim = _sites_per_dim(cspec)
+    P, L = f.shape[0], f.shape[1]
+    pe_cap = jnp.asarray(pe_cap, dtype=jnp.int32)
+    cap_b = pe_cap.reshape((-1,) + (1,) * 2)       # () or (P,) -> bcastable
+    out = jnp.ones_like(f)
+    theta = jnp.zeros_like(f)
+    backing_vals = []
+    for d in range(NDIMS):
+        divs = jnp.asarray(tables.divs[:, d, :])           # (L, D)
+        logs = jnp.asarray(tables.logs[:, d, :])           # (L, D)
+        alive = divs > 0
+        div_safe = jnp.where(alive, divs, 1)
+        remaining = jnp.broadcast_to(
+            jnp.asarray(tables.dims[:, d]), (P, L))        # (P, L) int32
+        for (k, lvl) in per_dim[d]:
+            x = f[:, :, k, lvl, d]                         # (P, L)
+            valid = alive[None] & (remaining[..., None] % div_safe[None] == 0)
+            if k == SPATIAL:
+                valid = valid & (divs[None] <= cap_b)
+            dist = jnp.abs(divs[None].astype(f.dtype) - x[..., None])
+            dist = jnp.where(valid, dist, jnp.inf)
+            idx = jnp.argmin(dist, axis=-1)                # first nearest
+            val = jnp.take_along_axis(
+                jnp.broadcast_to(divs[None], valid.shape), idx[..., None],
+                axis=-1)[..., 0]
+            lg = jnp.take_along_axis(
+                jnp.broadcast_to(logs[None], valid.shape), idx[..., None],
+                axis=-1)[..., 0]
+            out = out.at[:, :, k, lvl, d].set(val.astype(f.dtype))
+            theta = theta.at[:, :, k, lvl, d].set(lg)
+            remaining = remaining // val
+        backing_vals.append(remaining.astype(f.dtype))
+    backing = jnp.stack(backing_vals, axis=-1)             # (P, L, 7)
+    out = out.at[:, :, TEMPORAL, cspec.backing, :].set(backing)
+    return out, theta
+
+
+def round_population_device(fs, dims, pe_cap: int | None = None,
+                            spec=None) -> np.ndarray:
+    """Device counterpart of `round_population`: project a whole
+    population of continuous factors (P, L, 2, n_levels, 7) onto the
+    divisor grid in one jitted program.  Returns the rounded factor
+    tensor as numpy (orders are untouched by rounding — pair the result
+    with the caller's orders).  The fused search engines inline
+    `_round_population_core` instead of calling through here."""
+    import jax.numpy as jnp
+
+    cspec = resolve_spec(spec)
+    if pe_cap is None:
+        pe_cap = cspec.pe_cap
+    dims_key = tuple(tuple(int(x) for x in row) for row in np.asarray(dims))
+    fn = _round_device_jitted(cspec, dims_key, int(pe_cap))
+    out, _ = fn(jnp.asarray(fs, dtype=jnp.float32))
+    return np.asarray(out, dtype=float)
+
+
+@functools.lru_cache(maxsize=64)
+def _round_device_jitted(cspec, dims_key: tuple, pe_cap: int):
+    """One compiled projection per (spec, dims, cap) — keyed by the
+    hashable dims tuple so repeated host calls stay warm."""
+    import jax
+
+    tables = rounding_tables(np.asarray(dims_key))
+    return jax.jit(lambda f: _round_population_core(cspec, tables, f,
+                                                    pe_cap))

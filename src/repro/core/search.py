@@ -27,20 +27,28 @@ Protocol details implemented from the paper:
   rounded mapping counts as one sample (Sec. 6.3 treats them as
   equivalent).
 
-Two execution engines share the protocol:
+Three execution engines share the protocol:
 
 * the *sequential* reference driver (``dosa_search(..., population=None)``)
   runs each start point's Adam descent as a Python loop of jitted steps;
-* the *batched* engine (``dosa_search(..., population=P)``) carries a
-  ``(P, L, 2, n_levels, 7)`` population of log-factor tensors and
-  executes each GD segment between roundings as one ``jax.lax.scan``
-  whose body is the Adam update of a ``jax.vmap``-ed loss — one device
-  program for the whole population instead of ``P x steps`` tiny
-  dispatches.  Rounding, ordering re-selection and oracle evaluation
-  happen population-wide on the host between segments, and per-start
-  sample accounting keeps ``SearchResult.history`` / ``n_evals``
-  comparable to the sequential path (identical totals; interleaved
-  order).
+* the *host-batched* engine (``dosa_search(..., population=P,
+  fused=False)``) carries a ``(P, L, 2, n_levels, 7)`` population of
+  log-factor tensors and executes each GD segment between roundings as
+  one ``jax.lax.scan`` whose body is the Adam update of a
+  ``jax.vmap``-ed loss — one device program for the whole population
+  instead of ``P x steps`` tiny dispatches.  Rounding, ordering
+  re-selection and oracle evaluation happen population-wide on the host
+  between segments;
+* the *fused* device-resident engine (``dosa_search(..., population=P)``,
+  the default) compiles the WHOLE segment loop into one program
+  (`make_fused_runner`): an outer ``lax.scan`` whose step is (Adam
+  sub-scan -> device nearest-divisor rounding over precomputed divisor
+  tables -> device ordering coordinate descent -> model best-EDP
+  tracking), with buffer donation on the carried population.  The host
+  touches only start points and the final read-back, over which oracle
+  accounting replays in host-batched order — so for a given seed all
+  engines report the same ``best_edp`` with identical ``n_evals``
+  (rounding snaps every engine onto the same divisor-grid candidates).
 """
 from __future__ import annotations
 
@@ -58,22 +66,33 @@ from .archspec import (ArchSpec, CompiledSpec, GEMMINI_SPEC, HWConfig,
 from .cosa import cosa_map_workload
 from .hw_infer import minimal_hw_for, random_hw_for
 from .mapping import SPATIAL, TEMPORAL, Mapping, stack_mappings
+from .mapping import unstack_mappings
 from .model import (SpecHW, capacities, capacity_penalty_spec,
                     infer_hw_spec, infer_hw_population_spec,
                     layer_el_all_orderings_spec,
                     layer_el_all_orderings_population_spec,
+                    population_best_init, population_best_update,
+                    population_edp_spec,
                     validity_penalty, workload_eval_spec,
                     _spec_hw_from_params)
 from .oracle import evaluate_workload
 from .problem import Workload
-from .rounding import round_all, round_population
+from .rounding import (round_all, round_population, rounding_tables,
+                       _round_population_core)
+
+# The default target's compiled spec, hoisted to a module constant so
+# the Gemmini-default paths of `build_f` / `theta_from_mappings` touch
+# no spec-cache lookup per call (they sit inside the hottest host
+# loops).
+_GEMMINI_CSPEC = compile_spec(GEMMINI_SPEC)
 
 # Free optimization sites of the default (Gemmini) target: temporal
 # ACC/SP for all dims, temporal REG for weight-irrelevant dims only (one
 # weight register per PE on Gemmini WS), plus the two Gemmini spatial
 # factors.  The backing-store temporal factor is inferred.  Generic
 # targets read `compile_spec(spec).free_mask` instead.
-FREE_MASK = compile_spec(GEMMINI_SPEC).free_mask
+FREE_MASK = _GEMMINI_CSPEC.free_mask
+_FREE_MASK_J = _GEMMINI_CSPEC.free_mask_j
 
 _ADAM_B1, _ADAM_B2, _ADAM_EPS = 0.9, 0.999, 1e-8
 
@@ -83,8 +102,7 @@ def build_f(theta: jnp.ndarray, dims: jnp.ndarray,
     """theta (L, 2, n_levels, 7) log-factors -> full factor tensor with
     inferred backing-store temporal factors (Sec. 5.3.3).
     dims: (L, 7) float."""
-    mask = compile_spec(GEMMINI_SPEC).free_mask_j if free_mask is None \
-        else free_mask
+    mask = _FREE_MASK_J if free_mask is None else free_mask
     f = jnp.where(mask, jnp.exp(theta), 1.0)
     inner = jnp.prod(f, axis=(1, 2)) / f[:, TEMPORAL, -1, :]
     f = f.at[:, TEMPORAL, -1, :].set(dims / inner)
@@ -317,30 +335,40 @@ def adam_step(theta, grad, m, v, t, lr: float, b1=_ADAM_B1, b2=_ADAM_B2,
     return theta - lr * mh / (jnp.sqrt(vh) + eps), m, v
 
 
+def _adam_scan(pop_grad, lr: float, theta, args, n_steps: int):
+    """One GD segment as a `jax.lax.scan` of Adam steps over the
+    population gradient — the traced core shared by the standalone
+    segment runner and the fused device-resident engines.  Fresh
+    momentum per segment, matching the sequential driver's reset after
+    every rounding."""
+    def body(carry, t):
+        th, m, v = carry
+        _, g = pop_grad(th, *args)
+        m = _ADAM_B1 * m + (1 - _ADAM_B1) * g
+        v = _ADAM_B2 * v + (1 - _ADAM_B2) * g * g
+        mh = m / (1 - _ADAM_B1 ** t)
+        vh = v / (1 - _ADAM_B2 ** t)
+        th = th - lr * mh / (jnp.sqrt(vh) + _ADAM_EPS)
+        return (th, m, v), ()
+    ts = jnp.arange(1, n_steps + 1, dtype=theta.dtype)
+    zeros = jnp.zeros_like(theta)
+    (theta, _, _), _ = jax.lax.scan(body, (theta, zeros, zeros), ts)
+    return theta
+
+
 def make_segment_runner(pop_grad, lr: float):
     """Jitted Adam GD-segment executor shared by the batched population
     engine and the fleet engine (`core/fleet.py`): advance a whole
     population of log-factor tensors by `n_steps` Adam steps as a
     single `jax.lax.scan` whose body evaluates `pop_grad(theta, *args)
-    -> (value, grad)`.  Fresh momentum per segment, matching the
-    sequential driver's reset after every rounding.  Extra positional
-    `args` (orders; per-member spec tables for the fleet) are carried
-    through to `pop_grad` unchanged; `n_steps` is keyword-only."""
-    @partial(jax.jit, static_argnames=("n_steps",))
+    -> (value, grad)`.  Extra positional `args` (orders; per-member
+    spec tables for the fleet) are carried through to `pop_grad`
+    unchanged; `n_steps` is keyword-only.  The incoming population
+    tensor is donated: the Adam carry reuses its buffer in place, so a
+    segment holds one live population + momentum set instead of two."""
+    @partial(jax.jit, static_argnames=("n_steps",), donate_argnums=(0,))
     def run_segment(theta, *args, n_steps: int):
-        def body(carry, t):
-            th, m, v = carry
-            _, g = pop_grad(th, *args)
-            m = _ADAM_B1 * m + (1 - _ADAM_B1) * g
-            v = _ADAM_B2 * v + (1 - _ADAM_B2) * g * g
-            mh = m / (1 - _ADAM_B1 ** t)
-            vh = v / (1 - _ADAM_B2 ** t)
-            th = th - lr * mh / (jnp.sqrt(vh) + _ADAM_EPS)
-            return (th, m, v), ()
-        ts = jnp.arange(1, n_steps + 1, dtype=theta.dtype)
-        zeros = jnp.zeros_like(theta)
-        (theta, _, _), _ = jax.lax.scan(body, (theta, zeros, zeros), ts)
-        return theta
+        return _adam_scan(pop_grad, lr, theta, args, n_steps)
 
     return run_segment
 
@@ -365,28 +393,121 @@ def _segment_lengths(steps: int, round_every: int) -> list[int]:
     return [round_every] * full + ([rem] if rem else [])
 
 
+def make_fused_runner(workload: Workload, cfg: SearchConfig):
+    """Build the fully device-resident search engine: ONE jitted program
+    per (workload, cfg) whose outer `jax.lax.scan` runs the whole
+    one-loop protocol — each scan step is (Adam GD sub-scan -> device
+    nearest-divisor rounding -> device ordering coordinate descent ->
+    model best-EDP tracking) — so the host launches a single dispatch
+    per population chunk and reads back only the per-segment rounded
+    candidates (for oracle accounting) and the running device best.
+
+    `run_fused(theta, orders, *, n_full, rem, seg_len)` advances a
+    (P, L, 2, n_levels, 7) population through `n_full` segments of
+    `seg_len` GD steps plus an optional `rem`-step tail segment (the
+    segment schedule is static, so distinct `steps`/`round_every`
+    configurations compile their own single program).  theta and orders
+    are donated: the scan carry reuses their buffers in place.  Returns
+    ``((f_rounded, orders, model_edp), best)`` with a leading
+    per-segment axis on the first tuple.
+    """
+    def build():
+        cspec = _cspec(cfg)
+        loss, dims, strides, repeats = _make_loss_fn(workload, cfg)
+        pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0))
+        tables = rounding_tables(workload.dims_array())
+        pe_cap = int(_pe_cap(cfg, cspec))
+        hw_fixed = _fixed_spec_hw(cfg, cspec)
+        free_mask_j = cspec.free_mask_j
+        combos = jnp.asarray(cspec.combos)
+        reselect = cfg.ordering_mode in ("iterative", "softmax")
+
+        def segment(theta, orders, best, n_steps: int):
+            theta = _adam_scan(pop_grad, cfg.lr, theta, (orders,), n_steps)
+            f_cont = jax.vmap(
+                lambda th: build_f(th, dims, free_mask_j))(theta)
+            f_round, theta = _round_population_core(cspec, tables, f_cont,
+                                                    pe_cap)
+            if reselect:
+                if hw_fixed is not None:
+                    hws = jax.tree_util.tree_map(
+                        lambda x: jnp.broadcast_to(
+                            x, theta.shape[:1] + jnp.shape(x)), hw_fixed)
+                else:
+                    hws = infer_hw_population_spec(cspec, f_round, strides)
+                e, l = layer_el_all_orderings_population_spec(
+                    cspec, f_round, strides, hws)
+                rep = repeats[None, :, None]
+                choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
+                orders = combos[choice]                # (P, L, n_levels)
+            edp = population_edp_spec(cspec, f_round, orders, strides,
+                                      repeats, hw=hw_fixed)
+            best = population_best_update(best, edp, f_round, orders)
+            return theta, orders, best, (f_round, orders, edp)
+
+        @partial(jax.jit, static_argnames=("n_full", "rem", "seg_len"),
+                 donate_argnums=(0, 1))
+        def run_fused(theta, orders, *, n_full: int, rem: int,
+                      seg_len: int):
+            best = population_best_init(theta, orders)
+            ys = None
+            if n_full:
+                def body(carry, _):
+                    theta, orders, best = carry
+                    theta, orders, best, out = segment(theta, orders, best,
+                                                       seg_len)
+                    return (theta, orders, best), out
+                (theta, orders, best), ys = jax.lax.scan(
+                    body, (theta, orders, best), None, length=n_full)
+            if rem:
+                theta, orders, best, out = segment(theta, orders, best, rem)
+                tail = jax.tree_util.tree_map(lambda x: x[None], out)
+                ys = tail if ys is None else jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b]), ys, tail)
+            return ys, best
+
+        return run_fused, dims, strides, repeats
+
+    return _cached_engine(workload, cfg, "fused", build)
+
+
 # ---------------------------------------------------------------------------
 # Loop-ordering selection (Sec. 5.2.1): coordinate descent over the
 # 3**(n_levels-1) per-layer combos against network EDP (Eq. 14).
 # ---------------------------------------------------------------------------
 
-def _coordinate_descent_orderings(e: np.ndarray, l: np.ndarray,
-                                  n_passes: int) -> np.ndarray:
-    """Host-side coordinate descent over per-layer ordering choices.
-    e, l: (L, n_combos) repeat-scaled energies/latencies.  Returns (L,)
-    combo indices minimizing (sum e) * (sum l)."""
+@partial(jax.jit, static_argnames=("n_passes",))
+def _cd_orderings(e: jnp.ndarray, l: jnp.ndarray,
+                  n_passes: int = 2) -> jnp.ndarray:
+    """Coordinate descent over per-layer ordering choices as a pure
+    jittable program — ONE implementation (and therefore one float /
+    tie-breaking semantics) shared by the host helpers and the fused
+    device-resident engines.  e, l: (L, n_combos) repeat-scaled
+    energies/latencies.  Returns (L,) int32 combo indices minimizing
+    (sum e) * (sum l); each pass re-derives the totals then sweeps the
+    layers in order, exactly the original host algorithm."""
     L = e.shape[0]
-    choice = np.zeros(L, dtype=np.int64)
-    for _ in range(n_passes):
-        e_tot = e[np.arange(L), choice].sum()
-        l_tot = l[np.arange(L), choice].sum()
-        for i in range(L):
-            e_rest = e_tot - e[i, choice[i]]
-            l_rest = l_tot - l[i, choice[i]]
-            edps = (e_rest + e[i]) * (l_rest + l[i])
-            choice[i] = int(np.argmin(edps))
-            e_tot = e_rest + e[i, choice[i]]
-            l_tot = l_rest + l[i, choice[i]]
+
+    def one_pass(choice, _):
+        e_tot = jnp.sum(jnp.take_along_axis(e, choice[:, None], axis=1))
+        l_tot = jnp.sum(jnp.take_along_axis(l, choice[:, None], axis=1))
+
+        def layer_step(carry, xs):
+            choice, e_tot, l_tot = carry
+            i, ei, li = xs
+            c0 = choice[i]
+            e_rest = e_tot - ei[c0]
+            l_rest = l_tot - li[c0]
+            c = jnp.argmin((e_rest + ei) * (l_rest + li)).astype(choice.dtype)
+            choice = choice.at[i].set(c)
+            return (choice, e_rest + ei[c], l_rest + li[c]), ()
+
+        (choice, _, _), _ = jax.lax.scan(
+            layer_step, (choice, e_tot, l_tot), (jnp.arange(L), e, l))
+        return choice, ()
+
+    choice0 = jnp.zeros(L, dtype=jnp.int32)
+    choice, _ = jax.lax.scan(one_pass, choice0, None, length=n_passes)
     return choice
 
 
@@ -397,10 +518,9 @@ def select_orderings_spec(cspec: CompiledSpec, fs: np.ndarray,
     e, l = jax.vmap(lambda f, s: layer_el_all_orderings_spec(
         cspec, f, s, hw.c_pe, hw.cap_words))(
         jnp.asarray(fs), jnp.asarray(strides))
-    e = np.asarray(e) * repeats[:, None]             # (L, n_combos)
-    l = np.asarray(l) * repeats[:, None]
-    choice = _coordinate_descent_orderings(e, l, n_passes)
-    return combos[choice]                            # (L, n_levels)
+    rep = jnp.asarray(repeats, dtype=e.dtype)[:, None]
+    choice = _cd_orderings(e * rep, l * rep, n_passes=n_passes)
+    return combos[np.asarray(choice)]                # (L, n_levels)
 
 
 def select_orderings(fs: np.ndarray, strides: np.ndarray,
@@ -423,11 +543,11 @@ def select_orderings_population_spec(cspec: CompiledSpec,
     combos = cspec.combos
     e, l = layer_el_all_orderings_population_spec(
         cspec, jnp.asarray(fs_pop), jnp.asarray(strides), hws)
-    e = np.asarray(e) * repeats[None, :, None]
-    l = np.asarray(l) * repeats[None, :, None]
-    return np.stack([
-        combos[_coordinate_descent_orderings(e[p], l[p], n_passes)]
-        for p in range(e.shape[0])])
+    rep = jnp.asarray(repeats, dtype=e.dtype)[None, :, None]
+    choice = jax.vmap(
+        lambda ep, lp: _cd_orderings(ep, lp, n_passes=n_passes))(
+        e * rep, l * rep)
+    return combos[np.asarray(choice)]                # (P, L, n_levels)
 
 
 def select_orderings_population(fs_pop: np.ndarray, strides: np.ndarray,
@@ -557,14 +677,25 @@ def generate_start_points(workload: Workload, cfg: SearchConfig,
 # ---------------------------------------------------------------------------
 
 def dosa_search(workload: Workload, cfg: SearchConfig,
-                population: int | None = None) -> SearchResult:
+                population: int | None = None,
+                fused: bool = True) -> SearchResult:
     """Run DOSA co-search.  `population=None` is the sequential reference
     driver; `population=P` advances the start points P at a time through
     the batched scan/vmap engine (same protocol, same sample counting,
-    same start points for a given seed)."""
+    same start points for a given seed).
+
+    `fused` selects the population engine flavour: True (default) runs
+    the device-resident fused engine — one compiled program per chunk
+    containing every GD segment, rounding and ordering re-selection,
+    with the host touching only start points and final read-back;
+    False runs the host-batched reference engine, which returns to the
+    host at every rounding point.  Both are seeded-identical on divisor
+    grids (same rounded candidates => same oracle accounting)."""
     if population is not None:
         if population < 1:
             raise ValueError(f"population must be >= 1, got {population}")
+        if fused:
+            return _dosa_search_fused(workload, cfg, int(population))
         return _dosa_search_batched(workload, cfg, int(population))
     return _dosa_search_sequential(workload, cfg)
 
@@ -709,5 +840,59 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
                 theta_from_population(rounded_pop, cspec.free_mask),
                 dtype=jnp.float32)
             orders = jnp.asarray(orders_from_population(rounded_pop))
+
+    return rec.finish()
+
+
+def _dosa_search_fused(workload: Workload, cfg: SearchConfig,
+                       population: int) -> SearchResult:
+    """Device-resident engine driver: per population chunk the host
+    dispatches ONE compiled program (every GD segment + rounding +
+    ordering re-selection fused into a single scan, `make_fused_runner`)
+    and reads back the per-segment rounded candidates once at the end.
+    Oracle accounting then replays over the read-back in exactly the
+    host-batched engine's order, so `best_edp` / `n_evals` / `history`
+    are identical whenever both engines round to the same divisor-grid
+    candidates (GD float drift between the two compiled forms is
+    absorbed by the nearest-divisor snap; theta restarts from the same
+    integer logs each segment, so drift never accumulates)."""
+    cspec = _cspec(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    run_fused = make_fused_runner(workload, cfg)[0]
+    rec = _Recorder(workload, cfg, cspec)
+
+    # ---- start generation: identical RNG stream to the other drivers.
+    starts, best_start_edp = [], float("inf")
+    for _ in range(cfg.n_start_points):
+        mappings, edp0, best_start_edp = _generate_start_point(
+            workload, cfg, rng, best_start_edp, rec)
+        rec.best.start_edps.append(edp0)
+        starts.append(mappings)
+
+    seg_lens = _segment_lengths(cfg.steps, cfg.round_every)
+    n_full, rem = divmod(cfg.steps, cfg.round_every)
+
+    for lo in range(0, len(starts), population):
+        chunk = starts[lo:lo + population]
+        P = len(chunk)
+        for mappings in chunk:
+            rec.record(mappings)
+        if not seg_lens:
+            continue
+
+        theta = jnp.asarray(theta_from_population(chunk, cspec.free_mask),
+                            dtype=jnp.float32)
+        orders = jnp.asarray(orders_from_population(chunk))
+        (f_seg, o_seg, _), _best = run_fused(
+            theta, orders, n_full=n_full, rem=rem,
+            seg_len=cfg.round_every)
+
+        # ---- final read-back + oracle replay (host-batched order).
+        f_seg = np.asarray(f_seg, dtype=float)     # (S, P, L, 2, nl, 7)
+        o_seg = np.asarray(o_seg)                  # (S, P, L, n_levels)
+        for s, n_steps in enumerate(seg_lens):
+            rec.count(n_steps * P)   # one sample per GD step per start
+            for p in range(P):
+                rec.record(unstack_mappings(f_seg[s, p], o_seg[s, p]))
 
     return rec.finish()
