@@ -52,11 +52,57 @@ SPATIAL, TEMPORAL = 0, 1   # mirrors mapping.py (kept local to avoid a cycle)
 class EpaModel:
     """Energy per access in pJ/word: `base + slope * capacity_KB`,
     optionally divided by sqrt(C_PE) (Table 2's accumulator model).
-    `slope == 0` is a constant-EPA level (registers, DRAM)."""
+    `slope == 0` is a constant-EPA level (registers, DRAM).
+
+    `source` records where the coefficients came from: the shipped specs
+    use Table-2 constants (`"table"`); `EpaModel.fit` /
+    `calibration.calibrate_epa` produce `"fitted"` models whose
+    coefficients are least-squares fits to CACTI/Accelergy-style
+    measurement samples, so a spec's energy numbers can come from
+    measurement instead of paper constants."""
 
     base: float
     slope: float = 0.0
     pe_scaled: bool = False
+    source: str = "table"
+
+    def __call__(self, kb, c_pe=1.0):
+        """Evaluate pJ/word at capacity `kb` (KB) and `c_pe` total PEs.
+        Works with python scalars or numpy arrays."""
+        denom = c_pe ** 0.5 if self.pe_scaled else 1.0
+        return self.base + self.slope * kb / denom
+
+    @classmethod
+    def fit(cls, kb, c_pe, pj, pe_scaled: bool | None = None) -> "EpaModel":
+        """Least-squares fit of (base, slope) to measured
+        energy-per-access samples: `pj ~ base + slope * kb [/ sqrt(c_pe)]`.
+        `pe_scaled=None` tries both scalings and keeps the lower-residual
+        one.  Negative coefficients are clamped to zero and the remaining
+        coefficient refit (EPA models are physically nonnegative)."""
+        kb = np.asarray(kb, dtype=float)
+        c_pe = np.broadcast_to(np.asarray(c_pe, dtype=float), kb.shape)
+        pj = np.asarray(pj, dtype=float)
+        if kb.shape != pj.shape:
+            raise ValueError(f"kb {kb.shape} / pj {pj.shape} mismatch")
+
+        def _fit_one(scaled: bool) -> tuple["EpaModel", float]:
+            x = kb / np.sqrt(c_pe) if scaled else kb
+            a = np.stack([np.ones_like(x), x], axis=1)
+            (base, slope), *_ = np.linalg.lstsq(a, pj, rcond=None)
+            if slope < 0.0:
+                base, slope = float(np.mean(pj)), 0.0
+            if base < 0.0:
+                base = 0.0
+                denom = float(np.sum(x * x))
+                slope = float(np.sum(x * pj) / denom) if denom > 0 else 0.0
+            model = cls(float(base), float(slope), scaled, source="fitted")
+            resid = float(np.mean((model(kb, c_pe) - pj) ** 2))
+            return model, resid
+
+        if pe_scaled is not None:
+            return _fit_one(bool(pe_scaled))[0]
+        cands = [_fit_one(False), _fit_one(True)]
+        return min(cands, key=lambda mr: mr[1])[0]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,6 +24,13 @@ share one engine; Gemmini's 4-level hierarchy compiles its own.  Host
 work between GD segments (rounding, ordering re-selection, oracle
 evaluation) runs per spec, exactly as in `dosa_search`.
 
+Calibrated targets (`SearchConfig.surrogate = {spec_name: TrainedModel}`,
+see `core/calibration.py`) descend through their learned residual
+latency model instead: a surrogate bakes per-spec feature extraction
+and MLP weights into the GD trace, so those specs run their own
+single-target fused engine while uncovered specs keep the shared
+group engine.
+
 The per-member parametric model mirrors `model.layer_metrics_spec` /
 `model.infer_hw_spec` with the spec's Python-branching evaluators
 replaced by masked array arithmetic; unconstrained levels carry a large
@@ -55,7 +62,8 @@ from .rounding import (round_population, rounding_tables,
 from .search import (_Recorder, _adam_scan, _cd_orderings,
                      _generate_start_point, _segment_lengths,
                      _spatial_cap_penalty, SearchConfig, build_f,
-                     make_segment_runner, orders_from_population,
+                     dosa_search, make_segment_runner,
+                     orders_from_population,
                      select_orderings_population_spec,
                      theta_from_population)
 
@@ -430,9 +438,12 @@ def _check_cfg(cfg: SearchConfig) -> None:
     if cfg.spec is not None:
         raise ValueError("fleet_search takes the spec portfolio as its "
                          "own argument; leave SearchConfig.spec unset")
-    if cfg.surrogate is not None:
-        raise ValueError("the learned latency surrogate is Gemmini-only; "
-                         "fleet targets run the analytical model")
+    if cfg.surrogate is not None and not isinstance(cfg.surrogate, dict):
+        raise ValueError(
+            "fleet surrogates are per-target: pass a dict mapping spec "
+            "name -> TrainedModel (calibrate each spec with "
+            "core.calibration.calibrate), not a single model — feature "
+            "widths differ across specs")
     if cfg.fixed_hw is not None or cfg.latency_model is not None:
         raise ValueError("fleet_search co-searches hardware per target; "
                          "fixed_hw / latency_model are not supported")
@@ -545,25 +556,46 @@ def _search_group(workload: Workload, specs: list[ArchSpec],
                                 dtype=jnp.float32)
             orders = jnp.asarray(np.concatenate(new_orders))
 
-    entries = []
-    for spec, cspec, rec in zip(specs, cspecs, recs):
-        sr = rec.finish()
-        if sr.best_mappings and np.isfinite(sr.best_edp):
-            _, results = evaluate_workload(sr.best_mappings,
-                                           workload.layers, spec=cspec)
-            energy = sum(r.energy * layer.repeat
-                         for r, layer in zip(results, workload.layers))
-            latency = sum(r.latency * layer.repeat
-                          for r, layer in zip(results, workload.layers))
-        else:   # no valid candidate survived — report the degenerate point
-            energy = latency = float("inf")
-        entries.append(FleetEntry(
-            spec_name=spec.name, workload=workload.name,
-            best_edp=sr.best_edp, best_energy=float(energy),
-            best_latency=float(latency), best_hw=sr.best_hw,
-            best_mappings=sr.best_mappings, n_evals=sr.n_evals,
-            start_edps=sr.start_edps))
-    return entries
+    return [_fleet_entry(spec, cspec, workload, rec.finish())
+            for spec, cspec, rec in zip(specs, cspecs, recs)]
+
+
+def _fleet_entry(spec: ArchSpec, cspec: CompiledSpec, workload: Workload,
+                 sr) -> FleetEntry:
+    """Wrap one spec's `SearchResult` into a `FleetEntry`, re-evaluating
+    the best point through the per-spec oracle for the (energy, latency)
+    Pareto axes."""
+    if sr.best_mappings and np.isfinite(sr.best_edp):
+        _, results = evaluate_workload(sr.best_mappings,
+                                       workload.layers, spec=cspec)
+        energy = sum(r.energy * layer.repeat
+                     for r, layer in zip(results, workload.layers))
+        latency = sum(r.latency * layer.repeat
+                      for r, layer in zip(results, workload.layers))
+    else:       # no valid candidate survived — report the degenerate point
+        energy = latency = float("inf")
+    return FleetEntry(
+        spec_name=spec.name, workload=workload.name,
+        best_edp=sr.best_edp, best_energy=float(energy),
+        best_latency=float(latency), best_hw=sr.best_hw,
+        best_mappings=sr.best_mappings, n_evals=sr.n_evals,
+        start_edps=sr.start_edps)
+
+
+def _search_calibrated(workload: Workload, spec: ArchSpec,
+                       cfg: SearchConfig, model,
+                       fused: bool = True) -> list[FleetEntry]:
+    """Co-search one spec through its calibrated latency model.  A
+    surrogate bakes per-spec feature extraction and MLP weights into
+    the GD trace, so calibrated targets compile their own single-target
+    engine (the `dosa_search` population engine) instead of sharing the
+    group's parametric one — feature widths differ even across
+    same-structure specs (searched-level counts are numeric, not
+    structural)."""
+    scfg = dataclasses.replace(cfg, spec=spec, surrogate=model)
+    sr = dosa_search(workload, scfg, population=cfg.n_start_points,
+                     fused=fused)
+    return [_fleet_entry(spec, resolve_spec(spec), workload, sr)]
 
 
 def fleet_search(workloads: Workload | Iterable[Workload],
@@ -603,14 +635,27 @@ def fleet_search(workloads: Workload | Iterable[Workload],
         raise ValueError(f"duplicate spec names in {spec_names}; give "
                          "each ArchSpec a distinct name")
 
+    surrogates = cfg.surrogate or {}
+    unknown = set(surrogates) - set(spec_names)
+    if unknown:
+        raise ValueError(f"surrogates for unknown specs {sorted(unknown)}; "
+                         f"portfolio has {spec_names}")
+
     entries: list[FleetEntry] = []
     for workload in workloads:
         groups: dict[tuple, list[ArchSpec]] = {}
         for spec in specs:
+            if spec.name in surrogates:
+                continue      # calibrated targets run their own engine
             groups.setdefault(engine_group_key(spec), []).append(spec)
         for group_specs in groups.values():
             entries.extend(_search_group(workload, group_specs, cfg,
                                          fused=fused))
+        for spec in specs:
+            if spec.name in surrogates:
+                entries.extend(_search_calibrated(
+                    workload, spec, cfg, surrogates[spec.name],
+                    fused=fused))
     # Entry order: workload-major, then the caller's spec order.
     order = {(s.name, w.name): i for i, (w, s) in enumerate(
         (w, s) for w in workloads for s in specs)}

@@ -1,4 +1,11 @@
-"""Deterministic "Gemmini-RTL" stand-in (DESIGN.md Sec. 6 Deviations).
+"""Deterministic RTL-measurement stand-in (DESIGN.md Sec. 6 Deviations).
+
+Spec-generic: `rtl_latency(..., spec=s)` distorts any `ArchSpec`
+target's analytical latency (level indices — accumulation, input
+staging, backing store — are read from the compiled spec), so the
+calibration subsystem (`core/calibration.py`) can label datasets for
+every target.  The default is the original "Gemmini-RTL", bit-identical
+to the pre-spec implementation.
 
 The paper evaluates real-hardware latency with FireSim RTL simulation
 (Sec. 6.5).  Offline we substitute a *structured distortion* of the
@@ -29,10 +36,11 @@ import hashlib
 
 import numpy as np
 
-from .arch import ACC, DRAM, SP, GemminiHW, bandwidth_words_per_cycle
+from .arch import GemminiHW
+from .archspec import resolve_spec
 from .mapping import SPATIAL, Mapping
-from .oracle import OracleResult, evaluate
-from .problem import C, K, I_T, O_T, W_T, Layer
+from .oracle import evaluate
+from .problem import I_T, O_T, W_T, Layer
 
 BURST_WORDS = 64
 RAMP_CYCLES_PER_DISPATCH = 12.0    # x (rows + cols)
@@ -53,52 +61,66 @@ def _mapping_noise(m: Mapping, layer: Layer) -> float:
     return 1.0 + NOISE_AMPLITUDE * (2.0 * u - 1.0)
 
 
-def rtl_latency(m: Mapping, layer: Layer, hw: GemminiHW) -> float:
-    """Cycle count of the simulated RTL for one layer mapping.
-    Returns inf for invalid mappings (same validity rules as the
-    oracle)."""
-    r = evaluate(m, layer, hw=hw, quantize_dram=True)
+def rtl_latency(m: Mapping, layer: Layer, hw, spec=None) -> float:
+    """Cycle count of the simulated RTL for one layer mapping on any
+    `ArchSpec` target (default Gemmini — bit-identical to the original
+    Gemmini-only implementation there).  The distortion classes read
+    their level indices from the compiled spec: the accumulation level
+    (output drains), the innermost input-staging level ("scratchpad"),
+    and the backing store.  Returns inf for invalid mappings (same
+    validity rules as the oracle)."""
+    cspec = resolve_spec(spec)
+    r = evaluate(m, layer, hw=hw, quantize_dram=True, spec=cspec)
     if not r.valid:
         return float("inf")
 
+    acc_lvl = cspec.tensor_levels[O_T][0]     # accumulation level
+    sp_lvl = cspec.tensor_levels[I_T][0]      # input staging level
+    backing = cspec.backing
+    c_pe, _ = cspec.hw_words(hw)
+    # One hardware point per sample: fixed-silicon specs pin the array
+    # side (consistent with c_pe above), else the hardware point's.
+    pe_dim = cspec.spec.fixed_pe_dim or hw.pe_dim
+
     macs = layer.macs
-    sc = max(int(round(m.f[SPATIAL, ACC, C])), 1)
-    sk = max(int(round(m.f[SPATIAL, SP, K])), 1)
-    util = (sc * sk) / hw.c_pe
+    utilized = 1
+    for (lvl, d) in cspec.spatial_sites:
+        utilized *= max(int(round(m.f[SPATIAL, lvl, d])), 1)
+    util = utilized / c_pe
 
     # 1. ramp-up/drain + DMA setup per accumulator-tile dispatch:
     # mappings with many small output tiles pay heavily in RTL.
-    acc_tile = max(float(r.caps[ACC, O_T]), 1.0)
-    total_out = float(r.caps[DRAM, O_T])
+    acc_tile = max(float(r.caps[acc_lvl, O_T]), 1.0)
+    total_out = float(r.caps[backing, O_T])
     dispatches = max(total_out / acc_tile, 1.0)
-    ramp = (RAMP_CYCLES_PER_DISPATCH * (hw.pe_dim * 2)
+    ramp = (RAMP_CYCLES_PER_DISPATCH * (pe_dim * 2)
             + DMA_SETUP_CYCLES) * dispatches
 
-    # 2. DMA bursts: extra DRAM cycles from burst padding.
-    bw = bandwidth_words_per_cycle(float(hw.c_pe))
-    dram_words = float(r.accesses[DRAM])
+    # 2. DMA bursts: extra backing-store cycles from burst padding.
+    bw = cspec.bandwidth(float(c_pe))
+    dram_words = float(r.accesses[backing])
     burst_words = np.ceil(dram_words / BURST_WORDS) * BURST_WORDS
-    dma_extra = (burst_words - dram_words) / bw[DRAM]
+    dma_extra = (burst_words - dram_words) / bw[backing]
 
     # 3. control overhead at low spatial utilization (quadratic: very
     # small tiles never reach steady state in the array).
-    compute_cycles = macs / (sc * sk)
+    compute_cycles = macs / utilized
     control = CONTROL_DERATE * (1.0 - util) ** 2 * compute_cycles
 
-    # 4. non-overlapped scratchpad loads.
-    sp_cycles = float(r.accesses[SP]) / bw[SP]
+    # 4. non-overlapped staging-buffer loads.
+    sp_cycles = float(r.accesses[sp_lvl]) / bw[sp_lvl]
     serial = NONOVERLAP_FRACTION * sp_cycles
 
     # 5. row-misalignment: accumulator tile width not a multiple of the
     # array edge leaves bubbles in the drain path.
-    align = acc_tile % hw.pe_dim
-    misalign = MISALIGN_PENALTY * (align / hw.pe_dim) * compute_cycles
+    align = acc_tile % pe_dim
+    misalign = MISALIGN_PENALTY * (align / pe_dim) * compute_cycles
 
     # 6. bank-conflict / alignment resonances: smooth, deterministic,
     # non-monotone functions of the tile geometry (stand-in for SRAM
     # banking and NoC interactions real RTL exhibits).  Learnable from
     # mapping features by the DNN, invisible to the analytical model.
-    sp_tile = max(float(r.caps[SP, W_T] + r.caps[SP, I_T]), 1.0)
+    sp_tile = max(float(r.caps[sp_lvl, W_T] + r.caps[sp_lvl, I_T]), 1.0)
     phase = (0.80 * np.sin(np.pi * np.log2(acc_tile) / 5.0)
              + 0.60 * np.cos(np.pi * np.log2(sp_tile) / 6.0)
              + 0.40 * np.sin(2.0 * np.pi * util))
@@ -112,38 +134,25 @@ def rtl_latency(m: Mapping, layer: Layer, hw: GemminiHW) -> float:
 def build_dataset(layers, hw: GemminiHW, n_per_layer: int, seed: int = 0):
     """Random-mapping latency dataset a la Sec. 6.5.1 (the paper's 1567
     FireSim samples): returns (features, analytical_latency,
-    rtl_latency, layer_index) for valid mappings only."""
-    from .mapping import random_mapping
-    from .surrogate import featurize
+    rtl_latency, layer_index) for valid mappings only.  Legacy Gemmini
+    entry point — a tuple view of the spec-generic
+    `calibration.build_calibration_dataset` (same seeded sampling
+    protocol, bit-identical Gemmini features/labels)."""
+    from .calibration import build_calibration_dataset
 
-    rng = np.random.default_rng(seed)
-    feats, ana, rtl, idx = [], [], [], []
-    for li, layer in enumerate(layers):
-        got, tries = 0, 0
-        while got < n_per_layer and tries < 50 * n_per_layer:
-            tries += 1
-            m = random_mapping(np.asarray(layer.dims), rng,
-                               max_pe_dim=hw.pe_dim)
-            r = evaluate(m, layer, hw=hw)
-            if not r.valid:
-                continue
-            lat = rtl_latency(m, layer, hw)
-            feats.append(featurize(m, layer, hw))
-            ana.append(r.latency)
-            rtl.append(lat)
-            idx.append(li)
-            got += 1
-    return (np.asarray(feats), np.asarray(ana), np.asarray(rtl),
-            np.asarray(idx))
+    ds = build_calibration_dataset(layers, hw, n_per_layer=n_per_layer,
+                                   seed=seed)
+    return ds.features, ds.analytical, ds.target, ds.layer_idx
 
 
-def rtl_workload_edp(mappings, layers, hw: GemminiHW):
+def rtl_workload_edp(mappings, layers, hw, spec=None):
     """EDP with RTL latency + analytical energy — the paper's Sec. 6.5
-    composition (FireSim latency, Timeloop/Accelergy energy)."""
+    composition (FireSim latency, Timeloop/Accelergy energy).  `spec`
+    selects the target architecture (default Gemmini)."""
     e_tot, l_tot = 0.0, 0.0
     for m, layer in zip(mappings, layers):
-        lat = rtl_latency(m, layer, hw)
-        r = evaluate(m, layer, hw=hw)
+        lat = rtl_latency(m, layer, hw, spec=spec)
+        r = evaluate(m, layer, hw=hw, spec=spec)
         if not np.isfinite(lat) or not r.valid:
             return float("inf")
         e_tot += r.energy * layer.repeat

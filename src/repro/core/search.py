@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .arch import ACC, SP, WORD_BYTES, GemminiHW
+from .arch import GemminiHW
 from .archspec import (ArchSpec, CompiledSpec, GEMMINI_SPEC, HWConfig,
                        compile_spec, resolve_spec)
 from .cosa import cosa_map_workload
@@ -148,7 +148,9 @@ class SearchConfig:
     seed: int = 0
     latency_model: Callable | None = None  # (mappings, workload) -> EDP
     surrogate: object | None = None        # TrainedModel: GD descends
-    #   through the DNN residual/direct latency model (Sec. 6.5)
+    #   through the DNN residual/direct latency model (Sec. 6.5).
+    #   Spec-generic: the model must be calibrated for `spec`'s
+    #   featurization (core.calibration), validated at engine build.
 
 
 @dataclasses.dataclass
@@ -206,29 +208,23 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
     pe_cap = _pe_cap(cfg, cspec)
     hw_fixed = _fixed_spec_hw(cfg, cspec)
     free_mask_j = cspec.free_mask_j
-    if cfg.surrogate is not None and cspec.spec is not GEMMINI_SPEC:
-        raise ValueError("the learned latency surrogate is trained on "
-                         "Gemmini features; spec targets run analytical")
+    if cfg.surrogate is not None:
+        # Spec-generic calibration path: validate the trained model's
+        # feature width against the target's featurization up front.
+        from .calibration import check_surrogate
+        check_surrogate(cfg.surrogate, cspec)
 
     def _surrogate_latency(theta, f, orders, hw: SpecHW, lat_analytical):
         """Per-layer latency through the learned model (differentiable:
-        features are the log-factors = theta at the free sites)."""
-        from .surrogate import mlp_apply
+        features are the log-factors = theta at the spec's free sites —
+        `calibration.traced_features`, the in-loss twin of
+        `calibration.featurize_spec`)."""
+        from .calibration import traced_features
+        from .surrogate import DIRECT_CLIP, RESIDUAL_CLIP, mlp_apply
         sur = cfg.surrogate
-        L = f.shape[0]
-        fac = jax.vmap(lambda t: t[FREE_MASK])(theta)         # (L, 23)
-        logdims = jnp.log(dims)                               # (L, 7)
-        oh = jax.nn.one_hot(orders[:, 1:4], 3).reshape(L, 9)
-        pe_dim = jnp.sqrt(hw.c_pe)
-        acc_kb = hw.cap_words[ACC] * WORD_BYTES[ACC] / 1024.0
-        sp_kb = hw.cap_words[SP] * WORD_BYTES[SP] / 1024.0
-        hwf = jnp.stack([jnp.log(pe_dim), jnp.log(acc_kb),
-                         jnp.log(sp_kb)])
-        hwf = jnp.broadcast_to(hwf, (L, 3))
-        feats = jnp.concatenate([logdims, fac, oh, hwf], axis=1)
+        feats = traced_features(cspec, theta, orders, jnp.log(dims), hw)
         x = (feats - jnp.asarray(sur.x_mean)) / jnp.asarray(sur.x_std)
         out = mlp_apply(sur.params, x)                        # (L,)
-        from .surrogate import DIRECT_CLIP, RESIDUAL_CLIP
         if sur.kind == "residual":
             return lat_analytical * jnp.exp(
                 jnp.clip(out, -RESIDUAL_CLIP, RESIDUAL_CLIP))

@@ -23,10 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .arch import GemminiHW
+from .archspec import GEMMINI_SPEC, compile_spec
 from .mapping import Mapping
-from .oracle import evaluate
 from .problem import Layer
-from .search import FREE_MASK
+
+# The Gemmini GD free mask (the legacy featurization's factor sites),
+# read straight from the compiled spec — `search.FREE_MASK` is the same
+# array, but importing it here would cycle search -> calibration ->
+# surrogate -> search.
+FREE_MASK = compile_spec(GEMMINI_SPEC).free_mask
 
 N_HIDDEN_LAYERS = 7
 HIDDEN = 28          # 7x28 hidden -> 5,937 params (paper: 5,737)
@@ -94,6 +99,12 @@ class TrainedModel:
     x_mean: np.ndarray
     x_std: np.ndarray
     kind: str            # "residual" | "direct"
+    val_mse: float = float("nan")   # best held-out MSE seen by _fit
+    spec_name: str = "gemmini"      # featurization target (calibration)
+
+    @property
+    def n_features(self) -> int:
+        return int(np.asarray(self.x_mean).shape[0])
 
     def predict_latency(self, feats: np.ndarray,
                         analytical: np.ndarray) -> np.ndarray:
@@ -104,12 +115,41 @@ class TrainedModel:
                                                RESIDUAL_CLIP))
         return np.exp(np.clip(out, 0.0, DIRECT_CLIP))
 
+    def save(self, path) -> None:
+        """Persist to one `.npz` artifact (weights + normalization +
+        metadata) — the calibration-subsystem model format."""
+        arrays = {}
+        for i, p in enumerate(self.params):
+            arrays[f"w{i}"] = np.asarray(p["w"])
+            arrays[f"b{i}"] = np.asarray(p["b"])
+        np.savez(path, n_layers=np.asarray(len(self.params)),
+                 x_mean=np.asarray(self.x_mean),
+                 x_std=np.asarray(self.x_std),
+                 kind=np.asarray(self.kind),
+                 val_mse=np.asarray(self.val_mse),
+                 spec_name=np.asarray(self.spec_name), **arrays)
+
+    @classmethod
+    def load(cls, path) -> "TrainedModel":
+        with np.load(path, allow_pickle=False) as d:
+            n_layers = int(d["n_layers"])
+            params = [{"w": jnp.asarray(d[f"w{i}"]),
+                       "b": jnp.asarray(d[f"b{i}"])}
+                      for i in range(n_layers)]
+            return cls(params=params, x_mean=np.asarray(d["x_mean"]),
+                       x_std=np.asarray(d["x_std"]),
+                       kind=str(d["kind"]), val_mse=float(d["val_mse"]),
+                       spec_name=str(d["spec_name"]))
+
 
 def _fit(x: np.ndarray, y: np.ndarray, kind: str, epochs: int, lr: float,
          seed: int, weight_decay: float = 3e-4, batch_size: int = 128,
-         val_frac: float = 0.15) -> TrainedModel:
+         val_frac: float = 0.15, eval_callback=None,
+         spec_name: str = "gemmini") -> TrainedModel:
     """Minibatch Adam + L2, early-stopped on a held-out validation split
-    (keeps the best-validation parameters seen)."""
+    (keeps the best-validation parameters seen).  `eval_callback(epoch,
+    params, val_mse)` fires at every validation evaluation — test
+    instrumentation for the early-stopping contract."""
     rng = np.random.default_rng(seed)
     perm = rng.permutation(len(x))
     n_val = max(int(len(x) * val_frac), 1)
@@ -119,7 +159,7 @@ def _fit(x: np.ndarray, y: np.ndarray, kind: str, epochs: int, lr: float,
     xn = jnp.asarray((x - x_mean) / x_std, dtype=jnp.float32)
     yn = jnp.asarray(y, dtype=jnp.float32)
     xv, yv = xn[vi], yn[vi]
-    params = init_mlp(jax.random.PRNGKey(seed))
+    params = init_mlp(jax.random.PRNGKey(seed), n_in=x.shape[1])
 
     def loss_fn(p, xb, yb):
         mse = jnp.mean((mlp_apply(p, xb) - yb) ** 2)
@@ -153,30 +193,49 @@ def _fit(x: np.ndarray, y: np.ndarray, kind: str, epochs: int, lr: float,
             params, m, v = step(params, m, v, float(t), xn[sl], yn[sl])
         if epoch % 5 == 0 or epoch == epochs - 1:
             vm = float(val_mse(params))
+            if eval_callback is not None:
+                eval_callback(epoch, params, vm)
             if vm < best_val:
                 best_val, best_params = vm, jax.tree.map(lambda a: a,
                                                          params)
     return TrainedModel(params=best_params, x_mean=x_mean, x_std=x_std,
-                        kind=kind)
+                        kind=kind, val_mse=best_val, spec_name=spec_name)
 
 
 def train_residual_model(feats: np.ndarray, analytical: np.ndarray,
                          rtl: np.ndarray, epochs: int = 400,
-                         lr: float = 1e-3, seed: int = 0) -> TrainedModel:
+                         lr: float = 1e-3, seed: int = 0,
+                         **kwargs) -> TrainedModel:
     y = np.log(rtl / analytical)
-    return _fit(feats, y, "residual", epochs, lr, seed)
+    return _fit(feats, y, "residual", epochs, lr, seed, **kwargs)
 
 
 def train_direct_model(feats: np.ndarray, rtl: np.ndarray,
                        epochs: int = 400, lr: float = 1e-3,
-                       seed: int = 0) -> TrainedModel:
-    return _fit(feats, np.log(rtl), "direct", epochs, lr, seed)
+                       seed: int = 0, **kwargs) -> TrainedModel:
+    return _fit(feats, np.log(rtl), "direct", epochs, lr, seed, **kwargs)
+
+
+def _average_ranks(x: np.ndarray) -> np.ndarray:
+    """Fractional ranks with ties sharing the average of the positions
+    they span (standard Spearman tie handling).  A bare double-argsort
+    hands tied values arbitrary distinct ranks determined by input
+    order, which both breaks symmetry (spearman(a, b) != spearman(b, a))
+    and inflates correlations on tied data."""
+    x = np.asarray(x)
+    order = np.argsort(x, kind="stable")
+    pos = np.empty(len(x))
+    pos[order] = np.arange(len(x), dtype=float)
+    _, inv, counts = np.unique(x, return_inverse=True, return_counts=True)
+    sums = np.bincount(inv, weights=pos)
+    return sums[inv] / counts[inv]
 
 
 def spearman(a: np.ndarray, b: np.ndarray) -> float:
-    """Spearman rank correlation (paper's Fig. 10/11 metric)."""
-    ra = np.argsort(np.argsort(a)).astype(float)
-    rb = np.argsort(np.argsort(b)).astype(float)
+    """Spearman rank correlation (paper's Fig. 10/11 metric), with
+    average-rank tie handling."""
+    ra = _average_ranks(a)
+    rb = _average_ranks(b)
     ra -= ra.mean()
     rb -= rb.mean()
     denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
