@@ -13,13 +13,14 @@ from .common import scale
 
 BENCHES = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10_11", "fig12",
            "roofline", "tpu_autotune", "multi_target", "fleet", "timing",
-           "calibration")
+           "calibration", "serve")
 
 _MODULES = {
     "multi_target": "benchmarks.multi_target",
     "fleet": "benchmarks.fleet",
     "timing": "benchmarks.timing",
     "calibration": "benchmarks.calibration",
+    "serve": "benchmarks.serve",
     "fig4": "benchmarks.fig4_correlation",
     "fig6": "benchmarks.fig6_loop_ordering",
     "fig7": "benchmarks.fig7_cosearch",

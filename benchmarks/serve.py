@@ -1,0 +1,163 @@
+"""Co-search serving benchmark: synthetic query stream against
+`serve.CoSearchService`.
+
+Drives a stream of (workload, seed) queries drawn from a small family
+of canonical shapes through the persistent service and records the
+serving-layer health metrics into ``bench_results/serve_metrics.json``:
+
+* p50/p99 per-query latency, cold (first query of a shape pays the
+  engine compile) vs warm (every later query reuses it);
+* engine-cache hit rate and LRU eviction counters over the stream;
+* batched serving: same-shape different-seed queries fused into one
+  device program (engine `_cache_size() == 1`);
+* served-vs-direct equivalence: the service's answers are
+  bit-identical to direct `dosa_search` for the same seeds.
+
+Gates (CI fails on violation): warm p50 at least 3x better than cold,
+hit rate >= 0.8, equivalence exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Row, Timer, save_json
+
+_GATE_SPEEDUP = 3.0
+_GATE_HIT_RATE = 0.8
+
+
+def _shapes():
+    """Query-shape family: dims sit on the canonical bucket ladder, so
+    serving-layer bucketing is the identity on dims and served results
+    stay bit-identical to direct searches."""
+    from repro.core.problem import Layer, Workload
+    return [
+        Workload(layers=(Layer.matmul(64, 64, 64, name="a"),),
+                 name="mm64"),
+        Workload(layers=(Layer.matmul(128, 64, 32, name="a"),),
+                 name="mm128"),
+        Workload(layers=(Layer.conv(16, 32, 3, 16, name="a"),),
+                 name="cv16"),
+    ]
+
+
+def run(scale: str) -> list[Row]:
+    from repro.api import SearchRequest
+    from repro.core import search as search_mod
+    from repro.core.search import SearchConfig, dosa_search
+    from repro.serve.cosearch_service import CoSearchService, ServiceConfig
+
+    if scale == "paper":
+        steps, round_every, n_sp = 100, 25, 4
+        seeds = list(range(8))
+    else:
+        steps, round_every, n_sp = 30, 15, 2
+        seeds = list(range(4))
+    shapes = _shapes()
+
+    def cfg_for(seed):
+        return SearchConfig(steps=steps, round_every=round_every,
+                            n_start_points=n_sp, seed=seed)
+
+    search_mod._ENGINE_CACHE.clear(reset_stats=True)
+    svc = CoSearchService(ServiceConfig())
+    stats0 = svc.stats()["engine_cache"]
+
+    # ---- phase 1: one-query-at-a-time stream, shape-major so the
+    # first seed of each shape is the cold (compiling) query.
+    lat_cold, lat_warm = [], []
+    served = {}
+    for wl in shapes:
+        for i, seed in enumerate(seeds):
+            req = SearchRequest(workload=wl, config=cfg_for(seed))
+            with Timer() as t:
+                svc.submit(req)
+                out = svc.drain()[req.request_id]
+            served[(wl.name, seed)] = out
+            (lat_cold if i == 0 else lat_warm).append(t.seconds * 1e6)
+    stats1 = svc.stats()["engine_cache"]
+    hits = stats1["hits"] - stats0["hits"]
+    misses = stats1["misses"] - stats0["misses"]
+    hit_rate = hits / max(hits + misses, 1)
+
+    # ---- phase 2: batched serving — same shape, different seeds, one
+    # fused dispatch for the whole batch.
+    from repro.core.search import make_fused_runner
+    batch_reqs = [SearchRequest(workload=shapes[0], config=cfg_for(100 + s))
+                  for s in range(4)]
+    with Timer() as tb:
+        svc2 = CoSearchService(ServiceConfig())
+        for r in batch_reqs:
+            svc2.submit(r)
+        batch_outs = svc2.drain()
+    run_fused = make_fused_runner(
+        svc2._tasks[0].workload, batch_reqs[0].config)[0]
+    batch_cache_size = run_fused._cache_size()
+
+    # ---- phase 3: served == direct equivalence (after the stream so
+    # the direct runs' compiles don't pollute the serving hit rate).
+    n_checked, identical = 0, True
+    for wl in shapes:
+        seed = seeds[0]
+        direct = dosa_search(wl, cfg_for(seed), population=n_sp,
+                             fused=True)
+        got = served[(wl.name, seed)].result
+        n_checked += 1
+        identical &= (got.best_edp == direct.best_edp
+                      and got.n_evals == direct.n_evals
+                      and got.history == direct.history)
+    for r in batch_reqs[:2]:
+        direct = dosa_search(shapes[0], r.config, population=n_sp,
+                             fused=True)
+        got = batch_outs[r.request_id].result
+        n_checked += 1
+        identical &= (got.best_edp == direct.best_edp
+                      and got.n_evals == direct.n_evals)
+
+    cold_p50 = float(np.percentile(lat_cold, 50))
+    warm_p50 = float(np.percentile(lat_warm, 50))
+    speedup = cold_p50 / warm_p50 if warm_p50 else float("inf")
+
+    metrics = {
+        "scale": scale,
+        "n_queries": len(shapes) * len(seeds),
+        "shapes": [w.name for w in shapes],
+        "latency_us": {
+            "cold_p50": cold_p50,
+            "cold_p99": float(np.percentile(lat_cold, 99)),
+            "warm_p50": warm_p50,
+            "warm_p99": float(np.percentile(lat_warm, 99)),
+            "warm_vs_cold_speedup_p50": speedup,
+            "batch4_total": tb.seconds * 1e6,
+            "batch4_per_query": tb.seconds * 1e6 / len(batch_reqs),
+        },
+        "engine_cache": {**stats1, "stream_hit_rate": hit_rate},
+        "fleet_engine_cache": svc.stats()["fleet_engine_cache"],
+        "batch": {"n_requests": len(batch_reqs),
+                  "fused_cache_size": int(batch_cache_size)},
+        "equivalence": {"n_checked": n_checked,
+                        "seeded_identical": bool(identical)},
+        "gates": {"speedup_min": _GATE_SPEEDUP,
+                  "hit_rate_min": _GATE_HIT_RATE},
+    }
+    save_json("serve_metrics", metrics)
+
+    if not identical:
+        raise RuntimeError("served results diverge from direct "
+                           "dosa_search for the same seeds")
+    if hit_rate < _GATE_HIT_RATE:
+        raise RuntimeError(f"engine-cache hit rate {hit_rate:.2f} < "
+                           f"{_GATE_HIT_RATE}")
+    if speedup < _GATE_SPEEDUP:
+        raise RuntimeError(f"warm p50 speedup {speedup:.1f}x < "
+                           f"{_GATE_SPEEDUP}x")
+
+    return [
+        Row("serve_warm_query", warm_p50,
+            f"speedup={speedup:.1f}x hit_rate={hit_rate:.2f}"),
+        Row("serve_cold_query", cold_p50,
+            f"p99={metrics['latency_us']['cold_p99']:.0f}us"),
+        Row("serve_batch4", metrics["latency_us"]["batch4_per_query"],
+            f"fused_cache_size={batch_cache_size} "
+            f"identical={identical}"),
+    ]

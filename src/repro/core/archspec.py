@@ -466,6 +466,73 @@ def engine_group_key(spec) -> tuple:
             tuple(sorted(s.level0_temporal_dims)))
 
 
+# ---------------------------------------------------------------------------
+# Workload bucketing (co-search serving).  Every distinct (L, 7) problem
+# bakes its own constants into the traced engines, so a server answering
+# a stream of heterogeneous queries would compile without bound.
+# Padding each problem dim UP to a small canonical grid maps the stream
+# onto a bounded set of canonical workloads: engine compiles are bounded
+# and the cache hit rate stays high, at the cost of searching a
+# slightly-enlarged problem (the padded EDP upper-bounds the original's
+# — padding a dim only adds MACs/words, exactly like the zero-padding a
+# real kernel launch would do).
+# ---------------------------------------------------------------------------
+
+def bucket_dim(n: int) -> int:
+    """The canonical padded size of one problem dim: dims <= 8 are kept
+    exact (R/S/Q are tiny and structurally meaningful), larger dims
+    round up to the {2**k, 3 * 2**(k-1)} ladder (12, 16, 24, 32, 48,
+    64, ...).  Ladder values are divisor-rich — the rounding projection
+    and spatial tiling need factorable dims — and consecutive steps are
+    <= 4/3 apart, so padding inflates a dim by < 34%."""
+    n = int(n)
+    if n <= 8:
+        return n
+    cand = 8
+    while cand < n:
+        # the ladder alternates 2**k -> 3*2**(k-1) -> 2**(k+1) -> ...
+        cand = cand + cand // 2 if _is_pow2(cand) else cand * 4 // 3
+    return cand
+
+
+def _is_pow2(n: int) -> bool:
+    return n & (n - 1) == 0
+
+
+def bucket_workload(workload):
+    """Pad every layer dim of `workload` up to the canonical grid
+    (`bucket_dim`) and return the canonical `Workload`.  Strides and
+    repeats are preserved (they scale the objective and must not
+    change); the name is derived from the canonical content, so two
+    differently-named source workloads that pad to the same shape
+    compare equal — and therefore share one compiled engine."""
+    from .problem import Layer, Workload
+    layers = []
+    sig = []
+    for i, l in enumerate(workload.layers):
+        dims = tuple(bucket_dim(d) for d in l.dims)
+        # Layer names participate in Workload equality (and therefore in
+        # engine-cache keys), so they are canonicalized too.
+        layers.append(Layer(dims=dims, wstride=l.wstride,
+                            hstride=l.hstride, repeat=l.repeat,
+                            name=f"l{i}"))
+        sig.append("x".join(str(d) for d in dims)
+                   + f"s{l.wstride}.{l.hstride}r{l.repeat}")
+    return Workload(layers=tuple(layers), name="bkt_" + "_".join(sig))
+
+
+def engine_bucket_key(spec, workload) -> tuple:
+    """The serving-layer bucket key of a (spec, workload) query: the
+    spec's structural engine group (`engine_group_key`) plus the
+    canonical padded problem signature.  Two requests with equal keys
+    are served by the same warm engine family — same traced-model
+    structure AND same baked workload constants after bucketing."""
+    canon = bucket_workload(workload)
+    return (engine_group_key(spec),
+            tuple((l.dims, l.wstride, l.hstride, l.repeat)
+                  for l in canon.layers))
+
+
 @functools.lru_cache(maxsize=None)
 def compile_spec(spec: ArchSpec) -> CompiledSpec:
     """Lower an `ArchSpec` to its static model tables.  Cached: the same

@@ -49,6 +49,7 @@ import numpy as np
 
 from .archspec import (ArchSpec, CompiledSpec, engine_group_key,
                        resolve_spec)
+from .lru import LRUCache
 from .mapping import Mapping, stack_mappings, unstack_mappings
 from .model import (SpecHW, capacities, infer_hw_population_spec,
                     layer_c_pe_spec, layer_el_all_orderings_population_spec,
@@ -61,8 +62,8 @@ from .rounding import (round_population, rounding_tables,
                        _round_population_core)
 from .search import (_Recorder, _adam_scan, _cd_orderings,
                      _generate_start_point, _segment_lengths,
-                     _spatial_cap_penalty, SearchConfig, build_f,
-                     dosa_search, make_segment_runner,
+                     _spatial_cap_penalty, SearchConfig, SearchResult,
+                     build_f, dosa_search, make_segment_runner,
                      orders_from_population,
                      select_orderings_population_spec,
                      theta_from_population)
@@ -192,8 +193,15 @@ def member_edp(group: CompiledSpec, sp: SpecParams, f_all, orders, strides,
 # and every later fleet run over the same workload — reuses the trace.
 # ---------------------------------------------------------------------------
 
-_FLEET_ENGINE_CACHE: dict = {}
-_FLEET_ENGINE_CACHE_MAX = 16
+# Bounded LRU with eviction accounting (see `lru.LRUCache`): the
+# serving layer keeps a long-lived process around, so the fleet engine
+# cache must not grow without limit either.  `fleet_engine_cache_stats`
+# feeds the serving benchmark's metrics.
+_FLEET_ENGINE_CACHE = LRUCache(maxsize=16)
+
+
+def fleet_engine_cache_stats() -> dict:
+    return _FLEET_ENGINE_CACHE.stats()
 
 
 def fleet_engine_key(workload: Workload, spec, cfg: SearchConfig) -> tuple:
@@ -232,9 +240,7 @@ def _fleet_loss_fn(workload: Workload, group: CompiledSpec,
 
 
 def _fleet_cache_put(key, value):
-    if len(_FLEET_ENGINE_CACHE) >= _FLEET_ENGINE_CACHE_MAX:
-        _FLEET_ENGINE_CACHE.pop(next(iter(_FLEET_ENGINE_CACHE)))
-    _FLEET_ENGINE_CACHE[key] = value
+    _FLEET_ENGINE_CACHE.put(key, value)
     return value
 
 
@@ -364,6 +370,10 @@ class FleetEntry:
     best_mappings: list[Mapping]
     n_evals: int
     start_edps: list[float]
+    # (cumulative evals, best oracle EDP) trace of this target's search
+    # — the same shape SearchResult.history carries.
+    history: list[tuple[int, float]] = dataclasses.field(
+        default_factory=list)
 
 
 def _dominates(a: FleetEntry, b: FleetEntry) -> bool:
@@ -383,9 +393,39 @@ def pareto_front(entries: list[FleetEntry]) -> list[FleetEntry]:
 @dataclasses.dataclass
 class FleetResult:
     """Structured fleet output: one `FleetEntry` per (spec, workload),
-    plus Pareto reporting over the portfolio."""
+    plus Pareto reporting over the portfolio.
+
+    Implements the shared result protocol (`repro.api.ResultLike`:
+    `best_edp`, `history`, `n_evals`) so benchmark/report code treats
+    single-target and fleet results uniformly instead of
+    special-casing."""
 
     entries: list[FleetEntry]
+
+    @property
+    def best_edp(self) -> float:
+        """Lowest EDP over the whole portfolio (per-target bests are on
+        the entries; cross-workload minima only make sense as a summary
+        statistic, which is all the protocol promises)."""
+        return min((e.best_edp for e in self.entries),
+                   default=float("inf"))
+
+    @property
+    def n_evals(self) -> int:
+        return sum(e.n_evals for e in self.entries)
+
+    @property
+    def history(self) -> list[tuple[int, float]]:
+        """(cumulative evals, running best EDP) over the entries in
+        order — the fleet-level analogue of SearchResult.history."""
+        out: list[tuple[int, float]] = []
+        offset, best = 0, float("inf")
+        for e in self.entries:
+            for (ev, edp) in e.history:
+                best = min(best, edp)
+                out.append((offset + ev, best))
+            offset += e.n_evals
+        return out
 
     def entry(self, spec_name: str, workload: str) -> FleetEntry:
         for e in self.entries:
@@ -453,18 +493,40 @@ def _check_cfg(cfg: SearchConfig) -> None:
                          "ordering runs per-spec via dosa_search)")
 
 
-def _search_group(workload: Workload, specs: list[ArchSpec],
-                  cfg: SearchConfig,
-                  fused: bool = True) -> list[FleetEntry]:
-    """Co-search one structural group: every spec's start population is
-    stacked into one member axis and advanced by the shared engine.
-    With `fused=True` (default) the whole segment loop runs as ONE
-    device program per group (`make_fused_fleet_runner`) and the host
-    replays rounding-point oracle accounting from the final read-back;
-    with `fused=False` rounding / ordering re-selection / oracle
-    accounting run per spec between GD segments on the host (the
-    dosa_search host-batched protocol, per spec — the seeded-equivalence
-    reference)."""
+_TRACED_CFG_FIELDS = ("lr", "penalty_weight", "ordering_mode",
+                      "softmax_temp", "steps", "round_every",
+                      "n_start_points")
+
+
+def search_group_results(workload: Workload, specs: list[ArchSpec],
+                         cfg: SearchConfig, fused: bool = True,
+                         cfgs: list[SearchConfig] | None = None
+                         ) -> list[SearchResult]:
+    """Co-search one structural group and return the per-spec
+    `SearchResult`s: every spec's start population is stacked into one
+    member axis and advanced by the shared engine.  With `fused=True`
+    (default) the whole segment loop runs as ONE device program per
+    group (`make_fused_fleet_runner`) and the host replays
+    rounding-point oracle accounting from the final read-back; with
+    `fused=False` rounding / ordering re-selection / oracle accounting
+    run per spec between GD segments on the host (the dosa_search
+    host-batched protocol, per spec — the seeded-equivalence reference).
+
+    `cfgs` optionally carries one config per member for the host-side
+    protocol (start-point seeds, budget accounting) — the serving layer
+    batches same-structure requests with *different seeds* into one
+    engine this way.  Fields the traced program reads must agree with
+    `cfg` (asserted), since all members share its compiled engine."""
+    if cfgs is not None:
+        if len(cfgs) != len(specs):
+            raise ValueError(f"{len(cfgs)} configs for {len(specs)} specs")
+        for c in cfgs:
+            bad = [f for f in _TRACED_CFG_FIELDS
+                   if getattr(c, f) != getattr(cfg, f)]
+            if bad:
+                raise ValueError(
+                    f"per-member config disagrees with the shared engine "
+                    f"config on traced/protocol fields {bad}")
     run_segment = None if fused else make_fleet_runner(workload, specs[0],
                                                        cfg)
     group = resolve_spec(specs[0])
@@ -483,11 +545,12 @@ def _search_group(workload: Workload, specs: list[ArchSpec],
     spans: list[tuple[int, int]] = []
     thetas, orders_np, params = [], [], []
     lo = 0
-    for spec in specs:
+    for i, spec in enumerate(specs):
         cspec = resolve_spec(spec)
-        scfg = dataclasses.replace(cfg, spec=spec)
+        scfg = dataclasses.replace(cfg if cfgs is None else cfgs[i],
+                                   spec=spec)
         rec = _Recorder(workload, scfg, cspec)
-        rng = np.random.default_rng(cfg.seed)
+        rng = np.random.default_rng(scfg.seed)
         starts, best_start_edp = [], float("inf")
         for _ in range(cfg.n_start_points):
             mappings, edp0, best_start_edp = _generate_start_point(
@@ -556,8 +619,17 @@ def _search_group(workload: Workload, specs: list[ArchSpec],
                                 dtype=jnp.float32)
             orders = jnp.asarray(np.concatenate(new_orders))
 
-    return [_fleet_entry(spec, cspec, workload, rec.finish())
-            for spec, cspec, rec in zip(specs, cspecs, recs)]
+    return [rec.finish() for rec in recs]
+
+
+def _search_group(workload: Workload, specs: list[ArchSpec],
+                  cfg: SearchConfig,
+                  fused: bool = True) -> list[FleetEntry]:
+    """`search_group_results` wrapped into per-(spec, workload)
+    `FleetEntry`s — the fleet_search driver path."""
+    results = search_group_results(workload, specs, cfg, fused=fused)
+    return [_fleet_entry(spec, resolve_spec(spec), workload, sr)
+            for spec, sr in zip(specs, results)]
 
 
 def _fleet_entry(spec: ArchSpec, cspec: CompiledSpec, workload: Workload,
@@ -579,7 +651,7 @@ def _fleet_entry(spec: ArchSpec, cspec: CompiledSpec, workload: Workload,
         best_edp=sr.best_edp, best_energy=float(energy),
         best_latency=float(latency), best_hw=sr.best_hw,
         best_mappings=sr.best_mappings, n_evals=sr.n_evals,
-        start_edps=sr.start_edps)
+        start_edps=sr.start_edps, history=list(sr.history))
 
 
 def _search_calibrated(workload: Workload, spec: ArchSpec,
@@ -613,8 +685,25 @@ def fleet_search(workloads: Workload | Iterable[Workload],
     the device; `fused=False` is the host-batched reference (one device
     program per GD segment, rounding/ordering on the host).  Returns a
     `FleetResult` of per-(spec, workload) bests and the Pareto frontier
-    over targets x workloads."""
-    cfg = SearchConfig() if cfg is None else cfg
+    over targets x workloads.
+
+    Since the `repro.api` façade redesign this entry point is a thin
+    wrapper: it builds a portfolio `api.SearchRequest` and runs it
+    synchronously, bit-identical to the pre-façade driver (pinned by
+    seeded golden tests in tests/test_api.py)."""
+    from ..api import SearchRequest, run_request
+    if isinstance(specs, ArchSpec):
+        specs = [specs]
+    return run_request(SearchRequest(
+        workload=workloads, specs=tuple(specs),
+        config=SearchConfig() if cfg is None else cfg,
+        fused=fused)).result
+
+
+def execute_fleet_search(workloads, specs, cfg: SearchConfig,
+                         fused: bool = True) -> FleetResult:
+    """Fleet dispatch shared by `fleet_search` and the `repro.api`
+    executor — the pre-façade driver, unchanged."""
     _check_cfg(cfg)
     if isinstance(workloads, Workload):
         workloads = [workloads]

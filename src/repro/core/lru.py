@@ -1,0 +1,83 @@
+"""Bounded LRU cache with hit/miss/eviction accounting.
+
+The compiled-engine caches (`search._ENGINE_CACHE`,
+`fleet._FLEET_ENGINE_CACHE`) hold jitted XLA programs that cost seconds
+to rebuild, so they must stay warm across repeated searches — but a
+long-lived co-search server streams an unbounded variety of
+(workload, config) shapes through them, so they must also be *bounded*
+and observable.  This class replaces the previous unbounded/FIFO dicts:
+recently-used entries survive (true LRU, not insertion order), and the
+hit/miss/eviction counters feed the serving benchmark's
+``serve_metrics.json`` (engine-cache hit rate is a first-class serving
+metric).
+
+Keeps the mapping-protocol surface the old dicts exposed (`len`,
+`clear`, membership) so existing tests and benchmarks that size or
+reset the caches keep working.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+
+class LRUCache:
+    """A bounded least-recently-used cache with stats counters."""
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def get(self, key, default=None):
+        """Look up `key`, refreshing its recency.  Counts a hit or miss."""
+        if key in self._data:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value) -> None:
+        """Insert `key`, evicting the least-recently-used entry at the
+        bound (counted in `evictions`)."""
+        if key in self._data:
+            self._data.move_to_end(key)
+        elif len(self._data) >= self.maxsize:
+            self._data.popitem(last=False)
+            self.evictions += 1
+        self._data[key] = value
+
+    def get_or_build(self, key, build: Callable):
+        """The engine-cache idiom: return the cached value (hit) or
+        build, insert and return it (miss + possible eviction)."""
+        hit = self.get(key, None)
+        if hit is None:
+            hit = build()
+            self.put(key, hit)
+        return hit
+
+    def clear(self, reset_stats: bool = False) -> None:
+        self._data.clear()
+        if reset_stats:
+            self.hits = self.misses = self.evictions = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self._data), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}

@@ -65,6 +65,7 @@ from .archspec import (ArchSpec, CompiledSpec, GEMMINI_SPEC, HWConfig,
                        compile_spec, resolve_spec)
 from .cosa import cosa_map_workload
 from .hw_infer import minimal_hw_for, random_hw_for
+from .lru import LRUCache
 from .mapping import SPATIAL, TEMPORAL, Mapping, stack_mappings
 from .mapping import unstack_mappings
 from .model import (SpecHW, capacities, capacity_penalty_spec,
@@ -151,6 +152,31 @@ class SearchConfig:
     #   through the DNN residual/direct latency model (Sec. 6.5).
     #   Spec-generic: the model must be calibrated for `spec`'s
     #   featurization (core.calibration), validated at engine build.
+
+    def __post_init__(self):
+        """Fail fast on configurations that would otherwise die deep in
+        a jit trace (or, worse, silently search the wrong protocol)."""
+        if self.ordering_mode not in ("none", "iterative", "softmax"):
+            raise ValueError(
+                f"unknown ordering_mode {self.ordering_mode!r}; choose "
+                "'none', 'iterative' or 'softmax' (Sec. 5.2)")
+        for field in ("steps", "round_every", "n_start_points"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{field} must be a positive int, "
+                                 f"got {v!r}")
+        if self.lr <= 0.0:
+            raise ValueError(f"lr must be positive, got {self.lr!r}")
+        # A single-target surrogate must belong to this config's target:
+        # a model calibrated for another spec's physics (or feature
+        # width) is rejected here with calibration's own diagnostics
+        # instead of surfacing as an opaque trace failure.  Fleet
+        # surrogate *dicts* are validated per target by fleet_search.
+        sur = self.surrogate
+        if sur is not None and not isinstance(sur, dict) \
+                and hasattr(sur, "n_features") and hasattr(sur, "spec_name"):
+            from .calibration import check_surrogate
+            check_surrogate(sur, resolve_spec(self.spec))
 
 
 @dataclasses.dataclass
@@ -284,13 +310,16 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
 # Compiled-engine cache.  Jitting the loss costs seconds of XLA compile
 # per workload; re-deriving it on every dosa_search call would leave
 # nothing warm across repeated searches of the same workload (the common
-# case in benchmarks and sweeps).  Keyed by the workload plus every
-# config field the traced program reads; fields that only steer the host
-# driver (steps, seed, rejection protocol, latency_model) are excluded
-# on purpose.  The surrogate is keyed by identity: its parameters are
-# baked into the trace.
-_ENGINE_CACHE: dict = {}
-_ENGINE_CACHE_MAX = 16
+# case in benchmarks, sweeps, and the serving layer).  Keyed by the
+# workload plus every config field the traced program reads; fields that
+# only steer the host driver (steps, seed, rejection protocol,
+# latency_model) are excluded on purpose.  The surrogate is keyed by
+# identity: its parameters are baked into the trace.  Bounded LRU with
+# eviction accounting: a long-lived co-search server streams unbounded
+# (workload, config) variety through this cache, so it must not grow
+# without limit — `engine_cache_stats()` surfaces the hit/miss/eviction
+# counters (they feed `bench_results/serve_metrics.json`).
+_ENGINE_CACHE = LRUCache(maxsize=16)
 
 
 def _engine_key(workload: Workload, cfg: SearchConfig, kind: str):
@@ -301,13 +330,14 @@ def _engine_key(workload: Workload, cfg: SearchConfig, kind: str):
 
 
 def _cached_engine(workload: Workload, cfg: SearchConfig, kind: str, build):
-    key = _engine_key(workload, cfg, kind)
-    hit = _ENGINE_CACHE.get(key)
-    if hit is None:
-        if len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
-            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
-        hit = _ENGINE_CACHE[key] = build()
-    return hit
+    return _ENGINE_CACHE.get_or_build(_engine_key(workload, cfg, kind),
+                                      build)
+
+
+def engine_cache_stats() -> dict:
+    """Hit/miss/eviction counters of the compiled-engine cache — the
+    serving layer's warm-engine health metric."""
+    return _ENGINE_CACHE.stats()
 
 
 def make_loss(workload: Workload, cfg: SearchConfig):
@@ -686,7 +716,23 @@ def dosa_search(workload: Workload, cfg: SearchConfig,
     with the host touching only start points and final read-back;
     False runs the host-batched reference engine, which returns to the
     host at every rounding point.  Both are seeded-identical on divisor
-    grids (same rounded candidates => same oracle accounting)."""
+    grids (same rounded candidates => same oracle accounting).
+
+    Since the `repro.api` façade redesign this entry point is a thin
+    wrapper: it builds a single-target `api.SearchRequest` and runs it
+    synchronously, bit-identical to the pre-façade driver (pinned by
+    seeded golden tests in tests/test_api.py)."""
+    from ..api import SearchRequest, run_request
+    return run_request(SearchRequest(
+        workload=workload, config=cfg, population=population,
+        fused=fused)).result
+
+
+def execute_search(workload: Workload, cfg: SearchConfig,
+                   population: int | None = None,
+                   fused: bool = True) -> SearchResult:
+    """Engine dispatch shared by `dosa_search` and the `repro.api`
+    executor — the pre-façade driver, unchanged."""
     if population is not None:
         if population < 1:
             raise ValueError(f"population must be >= 1, got {population}")

@@ -1,0 +1,110 @@
+"""Preemption-safe checkpointing for in-flight co-search tasks.
+
+The serving layer (`serve.cosearch_service`) advances a batched search
+one rounding segment at a time; between segments the whole task state
+is tiny and host-resident — the rounded log-factor population, the
+ordering choices, and each request's oracle-accounting snapshot.  This
+module serializes exactly that state through `repro.checkpoint`'s
+atomic save/restore, so a killed server resumes a task *bit-identically*
+to an uninterrupted run (pinned by tests/test_serve.py): the rounded
+population is the complete search state (theta restarts from the
+rounded integer logs each segment), and the recorder snapshot restores
+`n_evals`, `history`, `start_edps` and the running best exactly.
+
+Failure handling mirrors `runtime.fault_tolerance`: a segment that
+raises rolls the task back to its last checkpoint and retries, with
+`max_restarts` bounding the budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..core.hw_infer import minimal_hw_for
+from ..core.mapping import stack_mappings, unstack_mappings
+
+
+def recorder_state(rec) -> dict:
+    """Snapshot a `search._Recorder` as a flat dict of numpy arrays
+    (the only thing `repro.checkpoint` stores)."""
+    best = rec.best
+    state = {
+        "evals": np.int64(rec.evals),
+        "start_edps": np.asarray(best.start_edps, dtype=np.float64),
+        "hist_evals": np.asarray([h[0] for h in best.history],
+                                 dtype=np.int64),
+        "hist_edps": np.asarray([h[1] for h in best.history],
+                                dtype=np.float64),
+        "best_edp": np.float64(best.best_edp),
+        "has_best": np.int64(1 if best.best_mappings else 0),
+    }
+    if best.best_mappings:
+        fs, orders = stack_mappings(best.best_mappings)
+        state["best_fs"] = fs
+        state["best_orders"] = orders
+    return state
+
+
+def load_recorder(rec, state: dict) -> None:
+    """Restore a fresh `_Recorder` to a `recorder_state` snapshot.
+
+    The running best's hardware point is recomputed from the restored
+    best mappings exactly as `_Recorder.record` derives it, so the
+    resumed result equals the uninterrupted one field-for-field."""
+    rec.evals = int(state["evals"])
+    best = rec.best
+    best.start_edps = [float(x)
+                       for x in np.atleast_1d(state["start_edps"])]
+    best.history = [(int(e), float(d)) for e, d in
+                    zip(np.atleast_1d(state["hist_evals"]),
+                        np.atleast_1d(state["hist_edps"]))]
+    best.best_edp = float(state["best_edp"])
+    if int(state["has_best"]):
+        mappings = unstack_mappings(np.asarray(state["best_fs"],
+                                               dtype=float),
+                                    np.asarray(state["best_orders"]))
+        best.best_mappings = mappings
+        cfg = rec.cfg
+        hw = minimal_hw_for(rec.cspec, mappings,
+                            list(rec.workload.layers))
+        if cfg.fixed_hw is not None and cfg.fix_pe_only:
+            hw = dataclasses.replace(hw, pe_dim=cfg.fixed_hw.pe_dim)
+        elif cfg.fixed_hw is not None:
+            hw = cfg.fixed_hw
+        best.best_hw = hw
+
+
+def task_dir(root: str | Path, task_id: str) -> Path:
+    return Path(root) / f"task_{task_id}"
+
+
+def save_task(root: str | Path, task_id: str, seg_idx: int,
+              theta: np.ndarray, orders: np.ndarray,
+              rec_states: list[dict]) -> None:
+    """Checkpoint one batched search task after completing segment
+    `seg_idx - 1` (i.e. `seg_idx` segments are done)."""
+    state = {"theta": np.asarray(theta),
+             "orders": np.asarray(orders),
+             "recs": {str(i): rs for i, rs in enumerate(rec_states)}}
+    ckpt.save(task_dir(root, task_id), seg_idx, state,
+              extra_meta={"task_id": task_id,
+                          "n_requests": len(rec_states)})
+
+
+def restore_task(root: str | Path, task_id: str
+                 ) -> tuple[int, np.ndarray, np.ndarray, list[dict]] | None:
+    """Load the latest checkpoint of a task, or None if it has none.
+    Returns (segments_done, theta, orders, recorder snapshots)."""
+    d = task_dir(root, task_id)
+    step = ckpt.latest_step(d)
+    if step is None:
+        return None
+    seg_idx, state = ckpt.restore(d, step)
+    # checkpoint._unflatten turns the digit-keyed recs dict back into a
+    # tuple ordered by request index.
+    rec_states = list(state["recs"])
+    return seg_idx, np.asarray(state["theta"]), \
+        np.asarray(state["orders"]), rec_states

@@ -1,0 +1,492 @@
+"""Co-search serving layer: a persistent warm-engine search server.
+
+`CoSearchService` turns the one-loop engine into infrastructure: it
+accepts a stream of `repro.api.SearchRequest`s and answers each one
+with the same result the synchronous entry points would return, while
+amortizing engine compiles across the stream.
+
+Request lifecycle
+-----------------
+1. **submit** — the request's workload is canonicalized
+   (`archspec.bucket_workload`: dims pad up to the divisor-rich ladder,
+   layer names canonicalize) so heterogeneous queries collapse onto a
+   bounded set of engine shapes; the request joins the pending queue.
+2. **batching** — pending requests group by batch key: the canonical
+   workload + the spec's structural `engine_group_key` + every config
+   field the traced engine reads (seeds excluded — requests that differ
+   only in seed share one compiled program).  Same-spec groups batch
+   *exactly*: each request's start population is generated with its own
+   seeded RNG stream (identical to `dosa_search`'s) and the populations
+   are stacked along the existing population axis — every population op
+   in the fused engine is per-member, so each request's slice is
+   bit-identical to running it alone.  Mixed-spec groups (same
+   structural group, different numeric tables) batch through the fleet
+   engine (`fleet.search_group_results`) with per-request configs.
+3. **advance** — `step()` runs one rounding segment of one task as a
+   single fused device program (`make_fused_runner` with `n_full=1`);
+   the population axis is padded up to a canonical member-bucket size
+   by replicating the last member, so distinct batch sizes reuse one
+   compiled shape.  After each segment the host replays oracle
+   accounting per request and emits a `ProgressEvent` stream
+   (best-EDP-so-far, Pareto-point updates).
+4. **checkpoint / resume** — with `checkpoint_dir` set, the task state
+   (rounded population + per-request recorder snapshots) checkpoints
+   every `checkpoint_every` segments via `runtime.search_checkpoint`;
+   a killed server resumes the task bit-identically, and a segment that
+   raises rolls back to the last checkpoint (`max_restarts` bounds the
+   retry budget, mirroring `runtime.fault_tolerance`).
+5. **done** — `outcome(request_id)` / `drain()` return `SearchOutcome`s
+   whose results are seeded-identical to direct `dosa_search` on the
+   canonical workload (bit-identical to the original workload whenever
+   its dims already sit on the canonical ladder, since padding is then
+   the identity and layer names never enter the math).
+
+Bucketing policy: padding a dim only adds MACs/words, so the canonical
+problem's EDP upper-bounds the original's; off-ladder queries trade a
+< 34%-per-dim problem inflation for a bounded compile set (policy test:
+tests/test_serve.py::test_bucketed_edp_within_tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..api import SearchOutcome, SearchRequest
+from ..core.archspec import (GEMMINI_SPEC, bucket_workload,
+                             engine_group_key, resolve_spec)
+from ..core.fleet import _TRACED_CFG_FIELDS, search_group_results
+from ..core.mapping import unstack_mappings
+from ..core.oracle import evaluate_workload
+from ..core.problem import Workload
+from ..core.search import (SearchConfig, _Recorder, _generate_start_point,
+                           _segment_lengths, engine_cache_stats,
+                           make_fused_runner, orders_from_population,
+                           theta_from_population)
+from ..core.fleet import fleet_engine_cache_stats
+from ..runtime import search_checkpoint as sckpt
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Serving policy knobs."""
+    bucket_workloads: bool = True   # canonicalize query shapes (see module doc)
+    batch_max: int = 8              # max requests fused into one batch task
+    member_buckets: tuple = (1, 2, 4, 8, 16)  # canonical population sizes
+    checkpoint_dir: str | None = None         # None: no persistence
+    checkpoint_every: int = 1       # segments between checkpoints
+    max_restarts: int = 2           # rollback retries per task
+
+
+@dataclasses.dataclass
+class ProgressEvent:
+    """One streamed increment of one request's search."""
+    request_id: str
+    segment: int                    # segments completed so far
+    n_segments: int
+    n_evals: int
+    best_edp: float                 # best-EDP-so-far
+    improved: bool                  # did this segment improve the best?
+    best_point: tuple | None        # (energy, latency) when improved
+    done: bool
+
+
+def _spec_of(cfg: SearchConfig):
+    return cfg.spec if cfg.spec is not None else GEMMINI_SPEC
+
+
+def _pad_size(n: int, buckets: tuple) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    b = buckets[-1]
+    while b < n:
+        b *= 2
+    return b
+
+
+def _best_point(rec: _Recorder):
+    """(energy, latency) Pareto coordinates of a recorder's current
+    best, re-evaluated through the oracle like `fleet._fleet_entry`."""
+    best = rec.best
+    if not best.best_mappings or not np.isfinite(best.best_edp):
+        return None
+    _, results = evaluate_workload(best.best_mappings,
+                                   rec.workload.layers, spec=rec.cspec)
+    energy = sum(r.energy * layer.repeat
+                 for r, layer in zip(results, rec.workload.layers))
+    latency = sum(r.latency * layer.repeat
+                  for r, layer in zip(results, rec.workload.layers))
+    return (float(energy), float(latency))
+
+
+class _BatchTask:
+    """One same-spec batch advancing through the fused single-target
+    engine, one rounding segment per `advance()` call."""
+
+    def __init__(self, svc_cfg: ServiceConfig, workload: Workload,
+                 requests: list[SearchRequest]):
+        self.svc_cfg = svc_cfg
+        self.workload = workload
+        self.requests = sorted(requests, key=lambda r: r.request_id)
+        self.cfg0 = self.requests[0].config
+        self.cspec = resolve_spec(self.cfg0.spec)
+        self.seg_lens = _segment_lengths(self.cfg0.steps,
+                                         self.cfg0.round_every)
+        self.task_id = hashlib.sha256("/".join(
+            r.request_id for r in self.requests).encode()).hexdigest()[:16]
+        self.recs: list[_Recorder] = []
+        self.spans: list[tuple[int, int]] = []
+        self.theta: np.ndarray | None = None   # (P_real, L, 2, nl, 7)
+        self.orders: np.ndarray | None = None  # (P_real, L, n_levels)
+        self.seg_done = 0
+        self.restarts = 0
+        self.started = False
+        self.done = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _fresh_recorders(self):
+        self.recs = [_Recorder(self.workload, r.config, self.cspec)
+                     for r in self.requests]
+        lo = 0
+        self.spans = []
+        for r in self.requests:
+            hi = lo + r.config.n_start_points
+            self.spans.append((lo, hi))
+            lo = hi
+
+    def _start_fresh(self):
+        """Generate every request's start population with its own seeded
+        RNG stream — the exact `_dosa_search_fused` protocol per
+        request, so accounting matches a direct run member-for-member."""
+        self._fresh_recorders()
+        thetas, orders = [], []
+        for req, rec in zip(self.requests, self.recs):
+            rcfg = req.config
+            rng = np.random.default_rng(rcfg.seed)
+            starts, best_start_edp = [], float("inf")
+            for _ in range(rcfg.n_start_points):
+                mappings, edp0, best_start_edp = _generate_start_point(
+                    self.workload, rcfg, rng, best_start_edp, rec)
+                rec.best.start_edps.append(edp0)
+                starts.append(mappings)
+            for mappings in starts:
+                rec.record(mappings)
+            thetas.append(theta_from_population(starts,
+                                                self.cspec.free_mask))
+            orders.append(orders_from_population(starts))
+        self.theta = np.concatenate(thetas).astype(np.float32)
+        self.orders = np.concatenate(orders)
+        self.seg_done = 0
+
+    def start(self) -> None:
+        if self.started:
+            return
+        self.started = True
+        restored = None
+        if self.svc_cfg.checkpoint_dir is not None:
+            restored = sckpt.restore_task(self.svc_cfg.checkpoint_dir,
+                                          self.task_id)
+        if restored is not None:
+            seg_done, theta, orders, rec_states = restored
+            self._fresh_recorders()
+            for rec, rs in zip(self.recs, rec_states):
+                sckpt.load_recorder(rec, rs)
+            self.theta, self.orders = theta, orders
+            self.seg_done = seg_done
+        else:
+            self._start_fresh()
+            self._checkpoint()   # seg-0 baseline: rollback target
+        if self.seg_done >= len(self.seg_lens):
+            self.done = True
+
+    def _checkpoint(self) -> None:
+        if self.svc_cfg.checkpoint_dir is None:
+            return
+        sckpt.save_task(self.svc_cfg.checkpoint_dir, self.task_id,
+                        self.seg_done, self.theta, self.orders,
+                        [sckpt.recorder_state(rec) for rec in self.recs])
+
+    def _rollback(self) -> None:
+        restored = None
+        if self.svc_cfg.checkpoint_dir is not None:
+            restored = sckpt.restore_task(self.svc_cfg.checkpoint_dir,
+                                          self.task_id)
+        if restored is not None:
+            seg_done, theta, orders, rec_states = restored
+            self._fresh_recorders()
+            for rec, rs in zip(self.recs, rec_states):
+                sckpt.load_recorder(rec, rs)
+            self.theta, self.orders = theta, orders
+            self.seg_done = seg_done
+        else:
+            # No persistence: start generation is deterministic, so a
+            # full replay from scratch reaches the same state.
+            self._start_fresh()
+
+    # -- one segment -------------------------------------------------------
+
+    def advance(self, fault_hook: Callable | None = None
+                ) -> list[ProgressEvent]:
+        """Run the next rounding segment as one fused device dispatch,
+        replay per-request oracle accounting over the read-back, and
+        stream one event per request.  Raising work rolls back to the
+        last checkpoint and retries (`max_restarts`)."""
+        self.start()
+        if self.done:
+            return []
+        prev_best = [rec.best.best_edp for rec in self.recs]
+        while True:
+            try:
+                self._advance_once(fault_hook)
+                break
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.svc_cfg.max_restarts:
+                    raise
+                self._rollback()
+        events = []
+        n_seg = len(self.seg_lens)
+        if self.seg_done >= n_seg:
+            self.done = True
+        for req, rec, pb in zip(self.requests, self.recs, prev_best):
+            improved = rec.best.best_edp < pb
+            events.append(ProgressEvent(
+                request_id=req.request_id, segment=self.seg_done,
+                n_segments=n_seg, n_evals=rec.evals,
+                best_edp=rec.best.best_edp, improved=improved,
+                best_point=_best_point(rec) if improved else None,
+                done=self.done))
+        return events
+
+    def _advance_once(self, fault_hook: Callable | None) -> None:
+        if fault_hook is not None:
+            fault_hook(self.task_id, self.seg_done)
+        n_steps = self.seg_lens[self.seg_done]
+        run_fused = make_fused_runner(self.workload, self.cfg0)[0]
+
+        p_real = self.theta.shape[0]
+        p_pad = _pad_size(p_real, self.svc_cfg.member_buckets)
+        theta = self.theta
+        orders = self.orders
+        if p_pad > p_real:
+            # Replicate the last member: every population op is
+            # per-member, so padding never perturbs the real slices.
+            pad = p_pad - p_real
+            theta = np.concatenate([theta, np.repeat(theta[-1:], pad, 0)])
+            orders = np.concatenate([orders,
+                                     np.repeat(orders[-1:], pad, 0)])
+        (f_seg, o_seg, _), _best = run_fused(
+            jnp.asarray(theta, dtype=jnp.float32), jnp.asarray(orders),
+            n_full=1, rem=0, seg_len=n_steps)
+        f_seg = np.asarray(f_seg, dtype=float)[0]   # (P_pad, L, 2, nl, 7)
+        o_seg = np.asarray(o_seg)[0]                # (P_pad, L, n_levels)
+
+        rounded = [unstack_mappings(f_seg[p], o_seg[p])
+                   for p in range(p_real)]
+        for rec, (a, b) in zip(self.recs, self.spans):
+            rec.count(n_steps * (b - a))
+            for p in range(a, b):
+                rec.record(rounded[p])
+        # The rounded population IS the next segment's start state: the
+        # fused engine restarts theta from the rounded integer logs each
+        # segment, so the host rebuild is bit-identical to the device
+        # carry (the PR-4 read-back guarantee).
+        self.theta = theta_from_population(rounded,
+                                           self.cspec.free_mask
+                                           ).astype(np.float32)
+        self.orders = orders_from_population(rounded)
+        self.seg_done += 1
+        if (self.seg_done % self.svc_cfg.checkpoint_every == 0
+                or self.seg_done >= len(self.seg_lens)):
+            self._checkpoint()
+
+    def outcomes(self) -> list[SearchOutcome]:
+        return [SearchOutcome(request_id=req.request_id,
+                              result=rec.finish())
+                for req, rec in zip(self.requests, self.recs)]
+
+
+class _GroupTask:
+    """A mixed-spec batch (same structural `engine_group_key`, different
+    numeric tables): one fleet-engine shot with per-request configs.
+    Runs to completion in a single `advance()` (no segment streaming —
+    the fleet engine owns its whole segment loop)."""
+
+    def __init__(self, svc_cfg: ServiceConfig, workload: Workload,
+                 requests: list[SearchRequest]):
+        self.workload = workload
+        self.requests = sorted(requests, key=lambda r: r.request_id)
+        self.done = False
+
+    def advance(self, fault_hook: Callable | None = None
+                ) -> list[ProgressEvent]:
+        if self.done:
+            return []
+        specs = [_spec_of(r.config) for r in self.requests]
+        cfgs = [r.config for r in self.requests]
+        results = search_group_results(self.workload, specs,
+                                       self.requests[0].config,
+                                       fused=True, cfgs=cfgs)
+        self._results = results
+        self.done = True
+        events = []
+        for req, sr in zip(self.requests, results):
+            events.append(ProgressEvent(
+                request_id=req.request_id, segment=1, n_segments=1,
+                n_evals=sr.n_evals, best_edp=sr.best_edp, improved=True,
+                best_point=None, done=True))
+        return events
+
+    def outcomes(self) -> list[SearchOutcome]:
+        return [SearchOutcome(request_id=req.request_id, result=sr)
+                for req, sr in zip(self.requests, self._results)]
+
+
+class CoSearchService:
+    """Persistent co-search server (single-threaded, cooperative).
+
+    `submit()` enqueues requests; `step()` advances one task by one
+    segment and returns the streamed events; `drain()` runs everything
+    to completion and returns `{request_id: SearchOutcome}`."""
+
+    def __init__(self, cfg: ServiceConfig | None = None):
+        self.cfg = ServiceConfig() if cfg is None else cfg
+        self._pending: list[SearchRequest] = []
+        self._tasks: list = []
+        self._events: dict[str, list[ProgressEvent]] = {}
+        self._outcomes: dict[str, SearchOutcome] = {}
+        self._frontier: dict[str, tuple] = {}   # request_id -> (E, L)
+        self._n_batches = 0
+        self._n_grouped = 0
+        self.fault_hook: Callable | None = None
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, req: SearchRequest) -> str:
+        """Enqueue one single-target request; returns its request_id.
+        The service always runs the fused population engine
+        (`population`/`fused` hints apply to the synchronous API only)."""
+        if req.is_fleet:
+            raise ValueError("the service batches single-target requests; "
+                             "portfolio queries go through "
+                             "api.run_request/fleet_search")
+        self._pending.append(req)
+        self._events.setdefault(req.request_id, [])
+        return req.request_id
+
+    def _canon_workload(self, req: SearchRequest) -> Workload:
+        return (bucket_workload(req.workload) if self.cfg.bucket_workloads
+                else req.workload)
+
+    def _batch_key(self, req: SearchRequest) -> tuple:
+        cfg = req.config
+        wl = self._canon_workload(req)
+        traced = tuple(getattr(cfg, f) for f in _TRACED_CFG_FIELDS)
+        extra = (cfg.fixed_hw, cfg.fix_pe_only, cfg.reject_factor,
+                 cfg.max_reject_tries, cfg.latency_model,
+                 id(cfg.surrogate) if cfg.surrogate is not None else None)
+        return (engine_group_key(_spec_of(cfg)), wl, traced, extra)
+
+    def _form_batches(self) -> None:
+        groups: dict[tuple, list[SearchRequest]] = {}
+        for req in self._pending:
+            groups.setdefault(self._batch_key(req), []).append(req)
+        self._pending = []
+        for key, reqs in groups.items():
+            wl = self._canon_workload(reqs[0])
+            for lo in range(0, len(reqs), self.cfg.batch_max):
+                chunk = reqs[lo:lo + self.cfg.batch_max]
+                specs = {_spec_of(r.config) for r in chunk}
+                if len(specs) == 1:
+                    self._tasks.append(_BatchTask(self.cfg, wl, chunk))
+                else:
+                    self._tasks.append(_GroupTask(self.cfg, wl, chunk))
+                    self._n_grouped += 1
+                self._n_batches += 1
+
+    # -- progress ----------------------------------------------------------
+
+    def step(self) -> list[ProgressEvent]:
+        """Advance ONE unfinished task by one segment; returns the
+        events it streamed (empty when the service is idle)."""
+        if self._pending:
+            self._form_batches()
+        for task in self._tasks:
+            if task.done:
+                continue
+            events = task.advance(self.fault_hook)
+            for ev in events:
+                self._events[ev.request_id].append(ev)
+                if ev.best_point is not None:
+                    self._frontier[ev.request_id] = ev.best_point
+            if task.done:
+                for req, out in zip(task.requests, task.outcomes()):
+                    self._outcomes[out.request_id] = out
+                    if out.request_id not in self._frontier:
+                        pt = _point_of(task.workload, req.config,
+                                       out.result)
+                        if pt is not None:
+                            self._frontier[out.request_id] = pt
+            return events
+        return []
+
+    def drain(self) -> dict[str, SearchOutcome]:
+        """Run every pending/in-flight request to completion."""
+        while self._pending or any(not t.done for t in self._tasks):
+            self.step()
+        return dict(self._outcomes)
+
+    # -- results -----------------------------------------------------------
+
+    def events(self, request_id: str) -> list[ProgressEvent]:
+        return list(self._events.get(request_id, []))
+
+    def outcome(self, request_id: str) -> SearchOutcome | None:
+        return self._outcomes.get(request_id)
+
+    def pareto_frontier(self) -> list[tuple]:
+        """Non-dominated (request_id, energy, latency) points over every
+        request's current best — the service-wide frontier whose deltas
+        the event stream carries (`best_point` updates)."""
+        pts = [(rid, e, l) for rid, (e, l) in self._frontier.items()]
+        front = []
+        for rid, e, l in pts:
+            if not any((e2 <= e and l2 <= l and (e2 < e or l2 < l))
+                       for _, e2, l2 in pts):
+                front.append((rid, e, l))
+        return sorted(front, key=lambda t: t[1])
+
+    def stats(self) -> dict:
+        """Serving health: engine-cache hit/miss/eviction counters plus
+        batching composition — the numbers `benchmarks/serve.py`
+        publishes to serve_metrics.json."""
+        return {
+            "engine_cache": engine_cache_stats(),
+            "fleet_engine_cache": fleet_engine_cache_stats(),
+            "n_batches": self._n_batches,
+            "n_grouped_batches": self._n_grouped,
+            "n_requests_done": len(self._outcomes),
+            "n_requests_pending": len(self._pending)
+            + sum(len(t.requests) for t in self._tasks if not t.done),
+        }
+
+
+def _point_of(workload: Workload, cfg: SearchConfig, res):
+    """(energy, latency) of a finished result's best point — the
+    fallback frontier entry for requests whose event stream never
+    carried one (best never improved past the start points)."""
+    mappings = getattr(res, "best_mappings", None)
+    if not mappings or not np.isfinite(res.best_edp):
+        return None
+    cspec = resolve_spec(cfg.spec)
+    _, results = evaluate_workload(mappings, workload.layers, spec=cspec)
+    energy = sum(r.energy * layer.repeat
+                 for r, layer in zip(results, workload.layers))
+    latency = sum(r.latency * layer.repeat
+                  for r, layer in zip(results, workload.layers))
+    return (float(energy), float(latency))

@@ -1,0 +1,183 @@
+"""`repro.api` façade: golden seeded equivalence with the legacy entry
+points, SearchConfig validation, the shared result protocol, and the
+bounded LRU engine caches."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ResultLike, SearchOutcome, SearchRequest,
+                       run_request)
+from repro.core import fleet, search
+from repro.core.archspec import EDGE_SPEC, TPU_V5E_SPEC
+from repro.core.fleet import FleetResult, fleet_search
+from repro.core.lru import LRUCache
+from repro.core.problem import Layer, Workload
+from repro.core.search import SearchConfig, SearchResult, dosa_search
+
+# Pre-façade golden values for the g2 workload, captured from the
+# legacy drivers before dosa_search/fleet_search became api wrappers.
+_GOLD_EDP = 1161434978982.144
+_GOLD_EVALS = 89
+_GOLD_STARTS = [4096597481441.28, 1161434978982.144]
+_GOLD_FLEET = {"tpu_v5e": 214327297240.99045,
+               "edge3": 2336616670565.376}
+
+
+@pytest.fixture(scope="module")
+def g2() -> Workload:
+    return Workload(layers=(Layer.conv(32, 64, 3, 28, name="c"),
+                            Layer.matmul(128, 256, 192, name="m")),
+                    name="g2")
+
+
+@pytest.fixture(scope="module")
+def cfg() -> SearchConfig:
+    return SearchConfig(steps=40, round_every=20, n_start_points=2,
+                        seed=9)
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: wrappers == pre-façade drivers, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_dosa_search_golden_population(g2, cfg):
+    r = dosa_search(g2, cfg, population=2, fused=True)
+    assert r.best_edp == _GOLD_EDP
+    assert r.n_evals == _GOLD_EVALS
+    assert r.start_edps == _GOLD_STARTS
+
+
+def test_dosa_search_golden_sequential(g2, cfg):
+    r = dosa_search(g2, cfg)
+    assert r.best_edp == _GOLD_EDP
+    assert r.n_evals == _GOLD_EVALS
+
+
+def test_fleet_search_golden(g2, cfg):
+    fr = fleet_search(g2, [TPU_V5E_SPEC, EDGE_SPEC], cfg)
+    got = {e.spec_name: e.best_edp for e in fr.entries}
+    assert got == _GOLD_FLEET
+
+
+def test_run_request_matches_wrapper(g2, cfg):
+    out = run_request(SearchRequest(workload=g2, config=cfg,
+                                    population=2))
+    direct = dosa_search(g2, cfg, population=2)
+    assert out.result.best_edp == direct.best_edp
+    assert out.result.history == direct.history
+    assert out.best_edp == direct.best_edp
+    assert out.n_evals == direct.n_evals
+
+
+# ---------------------------------------------------------------------------
+# SearchRequest semantics
+# ---------------------------------------------------------------------------
+
+def test_request_fingerprint_deterministic(g2, cfg):
+    a = SearchRequest(workload=g2, config=cfg)
+    b = SearchRequest(workload=g2, config=cfg)
+    assert a.request_id == b.request_id
+    c = SearchRequest(workload=g2,
+                      config=dataclasses.replace(cfg, seed=10))
+    assert c.request_id != a.request_id
+
+
+def test_request_validation(g2, cfg):
+    with pytest.raises(ValueError, match="fleet search over no"):
+        SearchRequest(workload=g2, config=cfg, specs=())
+    with pytest.raises(ValueError, match="population applies"):
+        SearchRequest(workload=g2, config=cfg,
+                      specs=(TPU_V5E_SPEC,), population=2)
+    with pytest.raises(ValueError, match="one Workload"):
+        SearchRequest(workload=[g2, g2], config=cfg)
+
+
+def test_fleet_request(g2, cfg):
+    out = run_request(SearchRequest(workload=g2, config=cfg,
+                                    specs=(TPU_V5E_SPEC, EDGE_SPEC)))
+    assert isinstance(out.result, FleetResult)
+    got = {e.spec_name: e.best_edp for e in out.result.entries}
+    assert got == _GOLD_FLEET
+
+
+# ---------------------------------------------------------------------------
+# SearchConfig validation (__post_init__)
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_unknown_ordering_mode():
+    with pytest.raises(ValueError, match="ordering_mode"):
+        SearchConfig(ordering_mode="bogus")
+
+
+@pytest.mark.parametrize("field", ["steps", "round_every",
+                                   "n_start_points"])
+def test_config_rejects_nonpositive(field):
+    with pytest.raises(ValueError, match=field):
+        SearchConfig(**{field: 0})
+    with pytest.raises(ValueError, match=field):
+        SearchConfig(**{field: -3})
+
+
+def test_config_rejects_nonpositive_lr():
+    with pytest.raises(ValueError, match="lr"):
+        SearchConfig(lr=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Shared result protocol
+# ---------------------------------------------------------------------------
+
+def test_results_satisfy_protocol(g2, cfg):
+    sr = dosa_search(g2, cfg, population=2)
+    fr = fleet_search(g2, [TPU_V5E_SPEC, EDGE_SPEC], cfg)
+    for res in (sr, fr):
+        assert isinstance(res, ResultLike)
+        assert np.isfinite(res.best_edp)
+        assert res.n_evals > 0
+        evals = [e for e, _ in res.history]
+        assert evals == sorted(evals)
+        # history carries a non-increasing running best
+        edps = [d for _, d in res.history]
+        assert all(b <= a for a, b in zip(edps, edps[1:]))
+    assert fr.best_edp == min(e.best_edp for e in fr.entries)
+    assert fr.n_evals == sum(e.n_evals for e in fr.entries)
+
+
+# ---------------------------------------------------------------------------
+# Bounded LRU engine caches
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_and_stats():
+    c = LRUCache(maxsize=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refresh a
+    c.put("c", 3)                   # evicts b (LRU)
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1
+    assert c.get("b") is None
+    s = c.stats()
+    assert s["size"] == 2 and s["hits"] == 1 and s["misses"] == 1
+
+
+def test_engine_cache_is_bounded(g2):
+    old = search._ENGINE_CACHE
+    search._ENGINE_CACHE = LRUCache(maxsize=2)
+    try:
+        for seed_lr in (0.01, 0.02, 0.03):
+            cfg = SearchConfig(steps=2, round_every=2, n_start_points=1,
+                               lr=seed_lr, seed=0)
+            dosa_search(g2, cfg, population=1)
+        assert len(search._ENGINE_CACHE) <= 2
+        assert search._ENGINE_CACHE.evictions >= 1
+        stats = search.engine_cache_stats()
+        assert stats["maxsize"] == 2
+    finally:
+        search._ENGINE_CACHE = old
+
+
+def test_fleet_cache_stats_surface():
+    stats = fleet.fleet_engine_cache_stats()
+    assert set(stats) >= {"size", "maxsize", "hits", "misses",
+                          "evictions", "hit_rate"}

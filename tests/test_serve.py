@@ -1,0 +1,236 @@
+"""Service-level tests for the co-search serving layer: batching
+equivalence, engine sharing, workload bucketing, and checkpointed
+kill/resume with fault-injection rollback."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import SearchRequest
+from repro.core import search as search_mod
+from repro.core.archspec import (EDGE_SPEC, TPU_V5E_SPEC, bucket_dim,
+                                 bucket_workload, engine_bucket_key,
+                                 GEMMINI_SPEC)
+from repro.core.lru import LRUCache
+from repro.core.problem import Layer, Workload
+from repro.core.search import SearchConfig, dosa_search, make_fused_runner
+from repro.serve.cosearch_service import (CoSearchService, ProgressEvent,
+                                          ServiceConfig)
+
+WL = Workload(layers=(Layer.conv(32, 64, 3, 28, name="c"),
+                      Layer.matmul(128, 256, 192, name="m")),
+              name="g2")
+
+
+def _cfg(seed=9, steps=40, round_every=20):
+    return SearchConfig(steps=steps, round_every=round_every,
+                        n_start_points=2, seed=seed)
+
+
+def _req(seed=9, wl=WL, **kw):
+    return SearchRequest(workload=wl, config=_cfg(seed, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Batched serving == direct search
+# ---------------------------------------------------------------------------
+
+def test_batched_requests_match_direct():
+    """Three different-seed requests fused into one batch: every
+    request's answer is bit-identical to running it alone."""
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False))
+    seeds = (9, 3, 5)
+    ids = {s: svc.submit(_req(s)) for s in seeds}
+    outs = svc.drain()
+    assert svc.stats()["n_batches"] == 1
+    for s in seeds:
+        direct = dosa_search(WL, _cfg(s), population=2, fused=True)
+        got = outs[ids[s]].result
+        assert got.best_edp == direct.best_edp
+        assert got.n_evals == direct.n_evals
+        assert got.history == direct.history
+        assert got.start_edps == direct.start_edps
+        assert got.best_hw == direct.best_hw
+
+
+def test_same_structure_requests_share_one_engine():
+    """Concurrent same-shape requests provably share ONE compiled
+    engine: the fused runner's jit cache holds a single program."""
+    old = search_mod._ENGINE_CACHE
+    search_mod._ENGINE_CACHE = LRUCache(maxsize=16)
+    try:
+        svc = CoSearchService(ServiceConfig(bucket_workloads=False))
+        for s in (1, 2, 3, 4):
+            svc.submit(_req(s))
+        svc.drain()
+        task = svc._tasks[0]
+        run_fused = make_fused_runner(task.workload, task.cfg0)[0]
+        assert run_fused._cache_size() == 1
+        # one engine entry in the service-wide cache, hit on reuse
+        stats = search_mod.engine_cache_stats()
+        assert stats["size"] == 1
+        assert stats["hits"] >= 1
+    finally:
+        search_mod._ENGINE_CACHE = old
+
+
+def test_streaming_events():
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False))
+    rid = svc.submit(_req(9))
+    svc.drain()
+    events = svc.events(rid)
+    assert len(events) == 2           # one per rounding segment
+    assert [e.segment for e in events] == [1, 2]
+    assert events[-1].done
+    assert events[-1].n_evals == svc.outcome(rid).n_evals
+    # best-EDP-so-far stream is non-increasing
+    bests = [e.best_edp for e in events]
+    assert all(b <= a for a, b in zip(bests, bests[1:]))
+    # the frontier carries the request's (energy, latency) best point
+    front = svc.pareto_frontier()
+    assert len(front) == 1 and front[0][0] == rid
+
+
+# ---------------------------------------------------------------------------
+# Workload bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_dim_ladder():
+    assert [bucket_dim(n) for n in (1, 7, 8, 9, 13, 28, 100)] == \
+        [1, 7, 8, 12, 16, 32, 128]
+
+
+def test_bucketed_requests_share_engine_key():
+    a = Workload(layers=(Layer.conv(30, 60, 3, 27, name="x"),), name="a")
+    b = Workload(layers=(Layer.conv(31, 62, 3, 26, name="y"),), name="b")
+    assert engine_bucket_key(GEMMINI_SPEC, a) == \
+        engine_bucket_key(GEMMINI_SPEC, b)
+    assert bucket_workload(a) == bucket_workload(b)
+
+
+def test_bucketed_edp_within_tolerance():
+    """The canonical (padded) problem's EDP upper-bounds the original's
+    and stays within the padding-inflation envelope: energy and latency
+    each scale at most with the MAC inflation, so EDP is bounded by
+    inflation**2 (with slack for mapping-quality noise)."""
+    wl = Workload(layers=(Layer.conv(30, 60, 3, 27, name="c"),),
+                  name="odd")
+    cfg = _cfg(9, steps=60)
+    svc = CoSearchService(ServiceConfig(bucket_workloads=True))
+    rid = svc.submit(SearchRequest(workload=wl, config=cfg))
+    served = svc.drain()[rid].result.best_edp
+    direct = dosa_search(wl, cfg, population=2, fused=True).best_edp
+    inflation = np.prod([bucket_dim(d) / d
+                         for l in wl.layers for d in l.dims])
+    assert served >= direct * 0.999        # padding only adds work
+    assert served <= direct * inflation**2 * 1.5
+
+
+def test_on_ladder_bucketing_is_identity_on_results():
+    """Dims already on the canonical ladder: bucketing only renames
+    layers, which never enters the math — served == direct exactly."""
+    wl = Workload(layers=(Layer.matmul(64, 64, 64, name="mm"),),
+                  name="ladder")
+    cfg = _cfg(4, steps=30, round_every=15)
+    svc = CoSearchService(ServiceConfig(bucket_workloads=True))
+    rid = svc.submit(SearchRequest(workload=wl, config=cfg))
+    served = svc.drain()[rid].result
+    direct = dosa_search(wl, cfg, population=2, fused=True)
+    assert served.best_edp == direct.best_edp
+    assert served.n_evals == direct.n_evals
+    assert served.history == direct.history
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed resume + fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_kill_resume_identical(tmp_path):
+    """Kill the server mid-search; a fresh server resumes the task from
+    its checkpoint and finishes bit-identically to an uninterrupted
+    direct run."""
+    cfg = _cfg(9, steps=60)
+    d = str(tmp_path)
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False,
+                                        checkpoint_dir=d))
+    rid = svc.submit(SearchRequest(workload=WL, config=cfg))
+    svc.step()          # one of three segments, checkpointed
+    del svc             # "kill"
+
+    svc2 = CoSearchService(ServiceConfig(bucket_workloads=False,
+                                         checkpoint_dir=d))
+    rid2 = svc2.submit(SearchRequest(workload=WL, config=cfg))
+    assert rid2 == rid  # deterministic fingerprint => same task
+    got = svc2.drain()[rid].result
+    # resumed run skipped start generation: fewer events than segments
+    assert len(svc2.events(rid)) == 2
+
+    direct = dosa_search(WL, cfg, population=2, fused=True)
+    assert got.best_edp == direct.best_edp
+    assert got.n_evals == direct.n_evals
+    assert got.history == direct.history
+    assert got.start_edps == direct.start_edps
+    assert got.best_hw == direct.best_hw
+
+
+def test_fault_rollback_max_restarts(tmp_path):
+    """A segment that raises rolls back to the last checkpoint and
+    retries; exhausting max_restarts re-raises."""
+    cfg = _cfg(9, steps=60)
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False,
+                                        checkpoint_dir=str(tmp_path),
+                                        max_restarts=2))
+    rid = svc.submit(SearchRequest(workload=WL, config=cfg))
+    fails = {"n": 0}
+
+    def hook(task_id, seg):
+        if seg == 1 and fails["n"] < 2:
+            fails["n"] += 1
+            raise RuntimeError("injected preemption")
+
+    svc.fault_hook = hook
+    got = svc.drain()[rid].result
+    assert fails["n"] == 2
+    direct = dosa_search(WL, cfg, population=2, fused=True)
+    assert got.best_edp == direct.best_edp
+    assert got.n_evals == direct.n_evals
+
+    svc2 = CoSearchService(ServiceConfig(bucket_workloads=False,
+                                         max_restarts=1))
+    svc2.submit(_req(11))
+
+    def always_fail(task_id, seg):
+        raise RuntimeError("hard fault")
+
+    svc2.fault_hook = always_fail
+    with pytest.raises(RuntimeError, match="hard fault"):
+        svc2.drain()
+
+
+# ---------------------------------------------------------------------------
+# Mixed-spec grouping
+# ---------------------------------------------------------------------------
+
+def test_mixed_spec_group_batch():
+    """Same structural group, different numeric tables: requests batch
+    through the fleet engine and match single-target searches."""
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False))
+    cfg = _cfg(9)
+    r1 = svc.submit(SearchRequest(
+        workload=WL, config=dataclasses.replace(cfg, spec=TPU_V5E_SPEC)))
+    r2 = svc.submit(SearchRequest(
+        workload=WL, config=dataclasses.replace(cfg, spec=EDGE_SPEC)))
+    outs = svc.drain()
+    assert svc.stats()["n_grouped_batches"] == 1
+    for rid, spec in ((r1, TPU_V5E_SPEC), (r2, EDGE_SPEC)):
+        direct = dosa_search(WL, dataclasses.replace(cfg, spec=spec),
+                             population=2, fused=True)
+        assert outs[rid].result.best_edp == direct.best_edp
+        assert outs[rid].result.n_evals == direct.n_evals
+
+
+def test_service_rejects_fleet_requests():
+    svc = CoSearchService()
+    with pytest.raises(ValueError, match="single-target"):
+        svc.submit(SearchRequest(workload=WL, config=_cfg(),
+                                 specs=(TPU_V5E_SPEC,)))
