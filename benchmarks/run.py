@@ -32,6 +32,32 @@ _MODULES = {
     "tpu_autotune": "benchmarks.tpu_autotune",
 }
 
+# Artifacts each benchmark promises to leave in common.OUTPUT_DIR — a
+# registered benchmark that "passes" without its artifact is a silent
+# reporting regression, so the driver fails the run.
+_ARTIFACTS = {
+    "multi_target": ("multi_target.json",),
+    "fleet": ("fleet.json", "fleet_frontier.csv"),
+    "timing": ("search_timing.json",),
+    "calibration": ("calibration_metrics.json",),
+    "serve": ("serve_metrics.json",),
+    "fig4": ("fig4.json",),
+    "fig6": ("fig6.json",),
+    "fig7": ("fig7.json",),
+    "fig8": ("fig8.json",),
+    "fig9": ("fig9.json",),
+    "fig10_11": ("fig10_11.json",),
+    "fig12": ("fig12_table7.json",),
+    "roofline": ("roofline.json",),
+    "tpu_autotune": ("tpu_autotune.json",),
+}
+
+
+def _missing_artifacts(key: str) -> list[str]:
+    from .common import OUTPUT_DIR
+    return [name for name in _ARTIFACTS.get(key, ())
+            if not (OUTPUT_DIR / name).is_file()]
+
 
 def main() -> None:
     import importlib
@@ -48,6 +74,11 @@ def main() -> None:
             mod = importlib.import_module(_MODULES[key])
             for row in mod.run(sc):
                 print(row.csv(), flush=True)
+            missing = _missing_artifacts(key)
+            if missing:
+                raise FileNotFoundError(
+                    f"benchmark {key!r} completed without writing its "
+                    f"declared artifacts {missing}")
         except Exception:
             failures.append(key)
             traceback.print_exc()

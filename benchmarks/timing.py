@@ -21,10 +21,21 @@ dilute the comparison; end-to-end timings with the real oracle are
 reported alongside.  All engines are pre-warmed at the measured shapes,
 so the rows compare steady-state execution, not XLA compiles.
 
+A population-scaling sweep (P in {8, 64, 256, 1024}) drives the raw
+fused runner with on-device seeding (`mapping.seed_population` — no
+population-sized host transfers) and records member-GD-steps/second per
+population, plus a shard-count sweep at P=1024 over the "pop" device
+mesh (shards in {1, 2, 4, 8} that fit the local device count).
+
 Gates (benchmarks.run exits non-zero on failure):
 * the fused loop is no slower than the host-batched loop,
 * fused and host-batched report identical best EDP and sample counts
-  (the seeded divisor-grid equivalence contract).
+  (the seeded divisor-grid equivalence contract),
+* near-linear shard scaling (>= 0.7x linear efficiency 1 -> max shards
+  at P=1024) — enforced only on hardware that can show it (>= 8
+  devices backed by >= 8 CPU cores; forced host devices timesharing
+  one core record honest numbers but cannot speed anything up, so the
+  payload carries `gate_enforced` alongside the measurement).
 
 Writes ``bench_results/search_timing.json``.
 """
@@ -115,6 +126,77 @@ def _stage_timings(wl, cfg, cspec) -> dict:
     }
 
 
+def _population_sweep(wl, cfg, cspec) -> dict:
+    """Throughput sweep of the raw fused runner: seed the population on
+    device, advance one rounding segment, block.  One timed repetition
+    after one warm (compiling) run per shape; run_fused donates its
+    inputs, so every call reseeds — seeding is part of the measured
+    pipeline on purpose (it is the stage this PR moved off the host)."""
+    import os
+
+    import jax
+
+    from repro.core.mapping import seed_population
+    from repro.core.search import make_fused_runner, shard_population
+    from repro.launch.mesh import auto_pop_shards
+
+    run_fused = make_fused_runner(wl, cfg)[0]
+    dims = wl.dims_array()
+    seg_len = cfg.round_every
+    ndev = len(jax.devices())
+
+    def one(pop: int, shards: int, key_i: int) -> None:
+        _, theta, orders = seed_population(
+            dims, pop, jax.random.PRNGKey(key_i), spec=cspec)
+        theta, orders = shard_population(theta, orders, shards)
+        out = run_fused(theta, orders, n_full=1, rem=0, seg_len=seg_len,
+                        shards=shards)
+        jax.block_until_ready(out)
+
+    sweep = []
+    for pop in (8, 64, 256, 1024):
+        shards = auto_pop_shards(pop)
+        one(pop, shards, 0)
+        with Timer() as t:
+            one(pop, shards, 1)
+        sweep.append({"population": pop, "shards": shards,
+                      "seconds": t.seconds,
+                      "member_steps_per_s": pop * seg_len / t.seconds})
+
+    p_max = 1024
+    per_shards = []
+    for s in (1, 2, 4, 8):
+        if s > ndev or p_max % s:
+            continue
+        one(p_max, s, 0)
+        with Timer() as t:
+            one(p_max, s, 1)
+        per_shards.append({"shards": s, "seconds": t.seconds,
+                           "member_steps_per_s":
+                               p_max * seg_len / t.seconds})
+    base = per_shards[0]["member_steps_per_s"]
+    top = per_shards[-1]
+    efficiency = (top["member_steps_per_s"] / base) / top["shards"]
+    cpus = os.cpu_count() or 1
+    gate_enforced = ndev >= 8 and cpus >= 8
+    assert all(e["member_steps_per_s"] > 0
+               for e in sweep + per_shards), "degenerate sweep timing"
+    if gate_enforced:
+        assert efficiency >= 0.7, (
+            f"shard scaling efficiency {efficiency:.2f} below the 0.7x "
+            f"near-linear gate at P={p_max}, "
+            f"{top['shards']} shards over {ndev} devices")
+    return {
+        "population_sweep": sweep,
+        "scaling": {"population": p_max, "segment_steps": seg_len,
+                    "per_shards": per_shards,
+                    "scaling_efficiency_1_to_max": efficiency,
+                    "max_shards": top["shards"]},
+        "devices": ndev, "cpu_count": cpus,
+        "gate_enforced": gate_enforced,
+    }
+
+
 def run(scale: str = "quick") -> list[Row]:
     if scale == "paper":
         steps, round_every = 1490, 500
@@ -155,6 +237,7 @@ def run(scale: str = "quick") -> list[Row]:
         f"reference: {r_fused.best_edp} vs {r_host.best_edp}")
 
     stages = _stage_timings(wl, cfg_stub, cspec)
+    sweep = _population_sweep(wl, cfg, cspec)
     loop_speedup = t_host.seconds / t_fused.seconds
     payload = {
         "scale": scale, "workload": WORKLOAD, "population": POPULATION,
@@ -170,6 +253,7 @@ def run(scale: str = "quick") -> list[Row]:
         "fused_vs_sequential_loop_speedup":
             t_seq.seconds / t_fused.seconds,
         "best_edp": r_fused.best_edp, "n_evals": r_fused.n_evals,
+        **sweep,
     }
     save_json("search_timing", payload)
 
@@ -194,4 +278,12 @@ def run(scale: str = "quick") -> list[Row]:
             f"fused_s={t_fused_e2e.seconds:.2f} "
             f"host_s={t_host_e2e.seconds:.2f} "
             f"edp={r_fused.best_edp:.4e}"),
+        Row("timing_pop_sweep", 0.0,
+            " ".join(f"P{e['population']}={e['member_steps_per_s']:.0f}/s"
+                     for e in sweep["population_sweep"])),
+        Row("timing_shard_scaling", 0.0,
+            " ".join(f"s{e['shards']}={e['member_steps_per_s']:.0f}/s"
+                     for e in sweep["scaling"]["per_shards"])
+            + f" eff={sweep['scaling']['scaling_efficiency_1_to_max']:.2f}"
+            + f" gate={'on' if sweep['gate_enforced'] else 'off'}"),
     ]

@@ -113,3 +113,17 @@ def cosa_map_workload(layers, hw, optimize_order: bool = False,
                       spec=None) -> list[Mapping]:
     return [cosa_map(l, hw, optimize_order=optimize_order, spec=spec)
             for l in layers]
+
+
+def cosa_seed_population(dims, n: int, key, *, spec=None, pe_cap=None):
+    """Device CoSA-seed kernel: `cosa_map`'s greedy spatial stage
+    (largest valid divisor per spatial site, `_largest_divisor_leq`)
+    with uniform random temporal factors, vectorized and jitted over the
+    spec's padded divisor tables — `mapping.seed_population` in its
+    "cosa" mode.  No buffer-budget fitting (that stays a host concern);
+    the point is a performant spatial fill that never leaves the device.
+    Returns jnp (f, theta, orders) for an n-member population."""
+    from .mapping import seed_population
+
+    return seed_population(dims, n, key, spec=spec, pe_cap=pe_cap,
+                           mode="cosa")

@@ -47,11 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..launch.mesh import auto_pop_shards, make_pop_mesh
+from ..sharding.rules import get_shard_map, member_spec, segment_member_spec
 from .archspec import (ArchSpec, CompiledSpec, engine_group_key,
                        resolve_spec)
 from .lru import LRUCache
 from .mapping import Mapping, stack_mappings, unstack_mappings
-from .model import (SpecHW, capacities, infer_hw_population_spec,
+from .model import (PopulationBest, SpecHW, capacities,
+                    infer_hw_population_spec,
                     layer_c_pe_spec, layer_el_all_orderings_population_spec,
                     population_best_init, population_best_update,
                     population_edp_spec, traffic_spec, utilized_pes,
@@ -61,7 +64,8 @@ from .problem import Workload
 from .rounding import (round_population, rounding_tables,
                        _round_population_core)
 from .search import (_Recorder, _adam_scan, _cd_orderings,
-                     _generate_start_point, _segment_lengths,
+                     _generate_start_point, _reduce_population_best,
+                     _segment_lengths,
                      _spatial_cap_penalty, SearchConfig, SearchResult,
                      build_f, dosa_search, make_segment_runner,
                      orders_from_population,
@@ -244,6 +248,20 @@ def _fleet_cache_put(key, value):
     return value
 
 
+def _shard_member_tree(tree, shards: int):
+    """Place every leaf's leading (member) axis on the "pop" mesh so
+    donated inputs already carry the sharded layout the engine expects
+    (`search.shard_population`, lifted to pytrees for `SpecParams`)."""
+    if shards == 1:
+        return tree
+    from jax.sharding import NamedSharding
+
+    mesh = make_pop_mesh(shards)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(
+            x, NamedSharding(mesh, member_spec(x.ndim - 1))), tree)
+
+
 def make_fleet_runner(workload: Workload, spec, cfg: SearchConfig):
     """Build (or fetch from cache) the fleet GD engine for `spec`'s
     structural group: a jitted ``run_segment(theta, orders, params,
@@ -287,7 +305,6 @@ def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
     group = resolve_spec(specs[0])
     cspecs = [resolve_spec(s) for s in specs]
     n = cfg.n_start_points
-    spans = [(i * n, (i + 1) * n) for i in range(len(specs))]
     strides = jnp.asarray(workload.strides_array(), dtype=jnp.float32)
     repeats = jnp.asarray(workload.repeats_array(), dtype=jnp.float32)
     dims = jnp.asarray(workload.dims_array(), dtype=jnp.float32)
@@ -299,56 +316,100 @@ def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
     loss = _fleet_loss_fn(workload, group, cfg)
     pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0, 0))
 
-    def segment(theta, orders, sp_stack, best, n_steps: int):
-        theta = _adam_scan(pop_grad, cfg.lr, theta, (orders, sp_stack),
-                           n_steps)
-        f_cont = jax.vmap(lambda th: build_f(th, dims, free_mask_j))(theta)
-        f_parts, th_parts, o_parts, edp_parts = [], [], [], []
-        for cspec, (a, b) in zip(cspecs, spans):
-            f_r, th_r = _round_population_core(cspec, tables,
-                                               f_cont[a:b], cspec.pe_cap)
-            if reselect:
-                hws = infer_hw_population_spec(cspec, f_r, strides)
-                e, l = layer_el_all_orderings_population_spec(
-                    cspec, f_r, strides, hws)
-                rep = repeats[None, :, None]
-                choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
-                o_r = combos[choice]
-            else:
-                o_r = orders[a:b]
-            edp_parts.append(population_edp_spec(cspec, f_r, o_r, strides,
-                                                 repeats))
-            f_parts.append(f_r)
-            th_parts.append(th_r)
-            o_parts.append(o_r)
-        f_round = jnp.concatenate(f_parts)
-        theta = jnp.concatenate(th_parts)
-        orders = jnp.concatenate(o_parts)
-        edp = jnp.concatenate(edp_parts)
-        best = population_best_update(best, edp, f_round, orders)
-        return theta, orders, best, (f_round, orders, edp)
+    def make_segment(spans):
+        """The segment body over a given per-spec span layout: global
+        spec-major spans for the unsharded path, local per-shard spans
+        (each shard holds n/shards starts of EVERY spec, shard-major
+        member layout) inside shard_map."""
+        def segment(theta, orders, sp_stack, best, n_steps: int):
+            theta = _adam_scan(pop_grad, cfg.lr, theta, (orders, sp_stack),
+                               n_steps)
+            f_cont = jax.vmap(
+                lambda th: build_f(th, dims, free_mask_j))(theta)
+            f_parts, th_parts, o_parts, edp_parts = [], [], [], []
+            for cspec, (a, b) in zip(cspecs, spans):
+                f_r, th_r = _round_population_core(cspec, tables,
+                                                   f_cont[a:b],
+                                                   cspec.pe_cap)
+                if reselect:
+                    hws = infer_hw_population_spec(cspec, f_r, strides)
+                    e, l = layer_el_all_orderings_population_spec(
+                        cspec, f_r, strides, hws)
+                    rep = repeats[None, :, None]
+                    choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
+                    o_r = combos[choice]
+                else:
+                    o_r = orders[a:b]
+                edp_parts.append(population_edp_spec(cspec, f_r, o_r,
+                                                     strides, repeats))
+                f_parts.append(f_r)
+                th_parts.append(th_r)
+                o_parts.append(o_r)
+            f_round = jnp.concatenate(f_parts)
+            theta = jnp.concatenate(th_parts)
+            orders = jnp.concatenate(o_parts)
+            edp = jnp.concatenate(edp_parts)
+            best = population_best_update(best, edp, f_round, orders)
+            return theta, orders, best, (f_round, orders, edp)
+        return segment
 
-    @partial(jax.jit, static_argnames=("n_full", "rem", "seg_len"),
+    def make_run_all(spans):
+        segment = make_segment(spans)
+
+        def run_all(theta, orders, sp_stack, n_full, rem, seg_len):
+            best = population_best_init(theta, orders)
+            ys = None
+            if n_full:
+                def body(carry, _):
+                    theta, orders, best = carry
+                    theta, orders, best, out = segment(
+                        theta, orders, sp_stack, best, seg_len)
+                    return (theta, orders, best), out
+                (theta, orders, best), ys = jax.lax.scan(
+                    body, (theta, orders, best), None, length=n_full)
+            if rem:
+                theta, orders, best, out = segment(theta, orders, sp_stack,
+                                                   best, rem)
+                tail = jax.tree_util.tree_map(lambda x: x[None], out)
+                ys = tail if ys is None else jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b]), ys, tail)
+            return ys, best
+        return run_all
+
+    @partial(jax.jit,
+             static_argnames=("n_full", "rem", "seg_len", "shards"),
              donate_argnums=(0, 1))
     def run_fused(theta, orders, sp_stack, *, n_full: int, rem: int,
-                  seg_len: int):
-        best = population_best_init(theta, orders)
-        ys = None
-        if n_full:
-            def body(carry, _):
-                theta, orders, best = carry
-                theta, orders, best, out = segment(theta, orders, sp_stack,
-                                                   best, seg_len)
-                return (theta, orders, best), out
-            (theta, orders, best), ys = jax.lax.scan(
-                body, (theta, orders, best), None, length=n_full)
-        if rem:
-            theta, orders, best, out = segment(theta, orders, sp_stack,
-                                               best, rem)
-            tail = jax.tree_util.tree_map(lambda x: x[None], out)
-            ys = tail if ys is None else jax.tree_util.tree_map(
-                lambda a, b: jnp.concatenate([a, b]), ys, tail)
-        return ys, best
+                  seg_len: int, shards: int = 1):
+        if shards == 1:
+            spans = [(i * n, (i + 1) * n) for i in range(len(specs))]
+            return make_run_all(spans)(theta, orders, sp_stack,
+                                       n_full, rem, seg_len)
+        # Sharded: the caller permuted members to shard-major layout, so
+        # each shard's local block is n/shards starts of every spec —
+        # the per-spec rounding unroll runs on local spans with zero
+        # cross-shard communication; only the reduced best crosses.
+        b = n // shards
+        spans = [(i * b, (i + 1) * b) for i in range(len(specs))]
+        run_all = make_run_all(spans)
+        mesh = make_pop_mesh(shards)
+
+        def sharded(theta, orders, sp_stack):
+            ys, best = run_all(theta, orders, sp_stack, n_full, rem,
+                               seg_len)
+            return ys, _reduce_population_best(best, shards)
+
+        from jax.sharding import PartitionSpec as _P
+        sp_specs = jax.tree_util.tree_map(
+            lambda x: member_spec(x.ndim - 1), sp_stack)
+        ys_specs = (segment_member_spec(4), segment_member_spec(2),
+                    segment_member_spec(0))
+        best_specs = PopulationBest(edp=_P(), f=_P(), orders=_P())
+        return get_shard_map()(
+            sharded, mesh=mesh,
+            in_specs=(member_spec(theta.ndim - 1),
+                      member_spec(orders.ndim - 1), sp_specs),
+            out_specs=(ys_specs, best_specs))(theta, orders, sp_stack)
 
     return _fleet_cache_put(key, run_fused)
 
@@ -576,14 +637,37 @@ def search_group_results(workload: Workload, specs: list[ArchSpec],
     if fused and seg_lens:
         # ---- ONE device program for the whole group's segment loop;
         # oracle accounting replays from the final read-back in the
-        # host-batched order (per segment, per spec, per member).
+        # host-batched order (per segment, per spec, per member).  With
+        # shards > 1 the member axis is sharded over the "pop" mesh:
+        # members permute to shard-major layout (every shard gets
+        # n/shards starts of each spec, keeping per-spec spans local),
+        # the read-back inverse-permutes — per-member ops make the
+        # permutation invisible, so results stay bit-identical.
         run_fused = make_fused_fleet_runner(workload, specs, cfg)
         n_full, rem = divmod(cfg.steps, cfg.round_every)
+        n = cfg.n_start_points
+        shards = auto_pop_shards(n, cfg.shards)
+        inv = None
+        if shards > 1:
+            b = n // shards
+            perm = np.array([s_i * n + i * b + j
+                             for i in range(shards)
+                             for s_i in range(len(specs))
+                             for j in range(b)])
+            inv = np.argsort(perm)
+            perm_j = jnp.asarray(perm)
+            theta, orders = theta[perm_j], orders[perm_j]
+            sp_stack = jax.tree_util.tree_map(lambda x: x[perm_j],
+                                              sp_stack)
+            theta, orders, sp_stack = _shard_member_tree(
+                (theta, orders, sp_stack), shards)
         (f_seg, o_seg, _), _best = run_fused(
             theta, orders, sp_stack, n_full=n_full, rem=rem,
-            seg_len=cfg.round_every)
+            seg_len=cfg.round_every, shards=shards)
         f_seg = np.asarray(f_seg, dtype=float)
         o_seg = np.asarray(o_seg)
+        if inv is not None:
+            f_seg, o_seg = f_seg[:, inv], o_seg[:, inv]
         for s, n_steps in enumerate(seg_lens):
             for cspec, rec, (a, b) in zip(cspecs, recs, spans):
                 rec.count(n_steps * (b - a))

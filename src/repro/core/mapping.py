@@ -21,6 +21,7 @@ construction in continuous space.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -123,6 +124,125 @@ def random_mapping(dims: np.ndarray, rng: np.random.Generator,
         f[TEMPORAL, cspec.backing, d] = remaining
     order = rng.integers(0, NORDERS, size=cspec.n_levels)
     return Mapping(f=f, order=order.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# On-device population seeding (the fused engine's start stage)
+# ---------------------------------------------------------------------------
+
+def seed_uniforms(dims, n: int, key, *, spec=None):
+    """The exact uniform tensors `seed_population` consumes for
+    (n, key): u_f (n, L, 7, S_max) drives one divisor pick per
+    (member, layer, dim, site), u_o (n, L, n_levels) drives the
+    per-level ordering choice; both float32.  Exposed so golden tests
+    can feed the numpy twin `seed_population_host` the same randomness
+    the device kernel saw."""
+    import jax
+    import jax.numpy as jnp
+
+    cspec = resolve_spec(spec)
+    L = int(np.asarray(dims).shape[0])
+    s_max = max(len(s) for s in sites_per_dim(cspec))
+    kf, ko = jax.random.split(key)
+    u_f = jax.random.uniform(kf, (n, L, NDIMS, s_max), dtype=jnp.float32)
+    u_o = jax.random.uniform(ko, (n, L, cspec.n_levels), dtype=jnp.float32)
+    return u_f, u_o
+
+
+def seed_population(dims, n: int, key, *, spec=None, pe_cap=None,
+                    mode: str = "random"):
+    """Seed an n-member population of valid integer mappings ON DEVICE —
+    the fused engine's start stage, so a 1k-start population never
+    materializes on host.  Returns jnp arrays (f, theta, orders):
+    f (n, L, 2, n_levels, 7) integer-valued float32 factors, theta the
+    matching free-site log-factors (the GD-ready carry, gathered from
+    the same float32 log table the rounding stage uses), orders
+    (n, L, n_levels) int32.
+
+    mode="random" mirrors `random_mapping`: each site takes a uniform
+    valid divisor of the remaining quotient (spatial capped at
+    `pe_cap`).  mode="cosa" fills spatial sites with the LARGEST valid
+    divisor (CoSA's greedy spatial stage, `cosa.cosa_map`) and draws
+    temporal factors uniformly.  One jitted program per
+    (spec, dims, n, cap, mode); bit-identical to the numpy twin
+    `seed_population_host` on the same uniforms."""
+    cspec = resolve_spec(spec)
+    if mode not in ("random", "cosa"):
+        raise ValueError(f"unknown seeding mode {mode!r}")
+    if pe_cap is None:
+        pe_cap = cspec.pe_cap
+    dims_key = tuple(tuple(int(x) for x in row) for row in np.asarray(dims))
+    fn = _seed_population_jitted(cspec, dims_key, int(n), int(pe_cap), mode)
+    return fn(key)
+
+
+def random_mapping_population(dims, n: int, key, *, spec=None, pe_cap=None):
+    """`random_mapping`, vectorized and jitted over the spec's padded
+    divisor tables — `seed_population` in its random mode."""
+    return seed_population(dims, n, key, spec=spec, pe_cap=pe_cap,
+                           mode="random")
+
+
+@functools.lru_cache(maxsize=64)
+def _seed_population_jitted(cspec, dims_key: tuple, n: int, pe_cap: int,
+                            mode: str):
+    """One compiled seeding kernel per (spec, dims, n, cap, mode) —
+    lazy rounding import because rounding imports this module."""
+    import jax
+
+    from .rounding import _seed_population_core, rounding_tables
+
+    tables = rounding_tables(np.asarray(dims_key, dtype=np.int64))
+
+    def fn(key):
+        u_f, u_o = seed_uniforms(dims_key, n, key, spec=cspec)
+        return _seed_population_core(cspec, tables, u_f, u_o, pe_cap,
+                                     mode == "cosa")
+
+    return jax.jit(fn)
+
+
+def seed_population_host(dims, u_f, u_o, *, spec=None, pe_cap=None,
+                         mode: str = "random"):
+    """Numpy reference twin of the device seeding kernel: the
+    `random_mapping` site walk, driven by pre-drawn uniforms instead of
+    a Generator (pick = floor(u * n_valid) over the ascending valid
+    divisors — exactly how `rng.choice` consumes a uniform).  Returns
+    (f, orders) numpy arrays, bit-identical to `seed_population`'s on
+    the same uniforms (the float32 index arithmetic matches XLA's).
+    Golden tests pin the two against each other."""
+    from .problem import divisors
+
+    cspec = resolve_spec(spec)
+    cap = cspec.pe_cap if pe_cap is None else int(pe_cap)
+    if mode not in ("random", "cosa"):
+        raise ValueError(f"unknown seeding mode {mode!r}")
+    u_f = np.asarray(u_f, dtype=np.float32)
+    u_o = np.asarray(u_o, dtype=np.float32)
+    n, L = u_f.shape[0], u_f.shape[1]
+    dims = np.asarray(dims)
+    f = np.ones((n, L, 2, cspec.n_levels, NDIMS), dtype=np.float32)
+    for p in range(n):
+        for li in range(L):
+            for d in range(NDIMS):
+                remaining = int(dims[li, d])
+                for si, (k, lvl) in enumerate(sites_per_dim(cspec)[d]):
+                    divs = [x for x in divisors(remaining)]
+                    if k == SPATIAL:
+                        divs = [x for x in divs if x <= cap]
+                    if k == SPATIAL and mode == "cosa":
+                        pick = divs[-1]
+                    else:
+                        u = u_f[p, li, d, si]
+                        j = min(int(u * np.float32(len(divs))),
+                                len(divs) - 1)
+                        pick = divs[j]
+                    f[p, li, k, lvl, d] = pick
+                    remaining //= pick
+                f[p, li, TEMPORAL, cspec.backing, d] = remaining
+    orders = np.minimum((u_o * np.float32(NORDERS)).astype(np.int32),
+                        NORDERS - 1)
+    return f, orders
 
 
 def stack_mappings(mappings: list[Mapping]) -> tuple[np.ndarray, np.ndarray]:

@@ -40,7 +40,7 @@ import numpy as np
 from .archspec import padded_divisor_tables
 from .archspec import sites_per_dim as _sites_per_dim
 from .archspec import resolve_spec
-from .mapping import SPATIAL, TEMPORAL, Mapping
+from .mapping import NORDERS, SPATIAL, TEMPORAL, Mapping
 from .problem import NDIMS, divisors
 
 
@@ -185,6 +185,72 @@ def _round_population_core(cspec, tables: RoundingTables, f, pe_cap):
     backing = jnp.stack(backing_vals, axis=-1)             # (P, L, 7)
     out = out.at[:, :, TEMPORAL, cspec.backing, :].set(backing)
     return out, theta
+
+
+def _seed_population_core(cspec, tables: RoundingTables, u_f, u_o,
+                          pe_cap, spatial_max: bool):
+    """Pure jittable population seeding — `_round_population_core`'s
+    sibling: the same innermost->outermost site walk over the padded
+    divisor tables, but *drawing* each factor instead of projecting one.
+
+    u_f: (P, L, 7, S_max) uniforms, one per (member, layer, dim, site);
+    u_o: (P, L, n_levels) uniforms for the per-level ordering choice.
+    Each site takes the floor(u * n_valid)-th valid divisor of the
+    remaining quotient (ascending order — exactly `rng.choice` of
+    `divisors(remaining)` driven by a pre-drawn uniform, the
+    `mapping.random_mapping` algorithm); spatial sites are additionally
+    capped at `pe_cap`, and with `spatial_max=True` take the LARGEST
+    valid divisor instead (CoSA's greedy spatial fill,
+    `cosa._largest_divisor_leq`).  The backing store absorbs the
+    remainder.  Returns (f, theta, orders): the integer factor tensor,
+    the free-site log-factors gathered from the float32 log table (the
+    GD-ready carry, like rounding's), and int32 ordering choices.
+
+    Bit-identical to the numpy twin `mapping.seed_population_host` for
+    the same uniforms — pinned by tests/test_device_seed.py."""
+    import jax.numpy as jnp
+
+    per_dim = _sites_per_dim(cspec)
+    P, L = u_f.shape[0], u_f.shape[1]
+    pe_cap = jnp.asarray(pe_cap, dtype=jnp.int32)
+    out = jnp.ones((P, L, 2, cspec.n_levels, NDIMS), dtype=jnp.float32)
+    theta = jnp.zeros_like(out)
+    backing_vals = []
+    for d in range(NDIMS):
+        divs = jnp.asarray(tables.divs[:, d, :])           # (L, D)
+        logs = jnp.asarray(tables.logs[:, d, :])           # (L, D)
+        alive = divs > 0
+        div_safe = jnp.where(alive, divs, 1)
+        remaining = jnp.broadcast_to(
+            jnp.asarray(tables.dims[:, d]), (P, L))        # (P, L) int32
+        for si, (k, lvl) in enumerate(per_dim[d]):
+            valid = alive[None] & (remaining[..., None] % div_safe[None] == 0)
+            if k == SPATIAL:
+                valid = valid & (divs[None] <= pe_cap)
+            count = jnp.sum(valid, axis=-1)                # (P, L), >= 1
+            if k == SPATIAL and spatial_max:
+                pick = count - 1                           # largest valid
+            else:
+                u = u_f[:, :, d, si]
+                pick = jnp.minimum(
+                    (u * count.astype(u.dtype)).astype(jnp.int32),
+                    count - 1)
+            cum = jnp.cumsum(valid, axis=-1)
+            sel = jnp.argmax((cum == pick[..., None] + 1) & valid, axis=-1)
+            val = jnp.take_along_axis(
+                jnp.broadcast_to(divs[None], valid.shape), sel[..., None],
+                axis=-1)[..., 0]
+            lg = jnp.take_along_axis(
+                jnp.broadcast_to(logs[None], valid.shape), sel[..., None],
+                axis=-1)[..., 0]
+            out = out.at[:, :, k, lvl, d].set(val.astype(out.dtype))
+            theta = theta.at[:, :, k, lvl, d].set(lg)
+            remaining = remaining // val
+        backing_vals.append(remaining.astype(out.dtype))
+    backing = jnp.stack(backing_vals, axis=-1)             # (P, L, 7)
+    out = out.at[:, :, TEMPORAL, cspec.backing, :].set(backing)
+    orders = jnp.minimum((u_o * NORDERS).astype(jnp.int32), NORDERS - 1)
+    return out, theta, orders
 
 
 def round_population_device(fs, dims, pe_cap: int | None = None,

@@ -49,6 +49,23 @@ Three execution engines share the protocol:
   accounting replays in host-batched order — so for a given seed all
   engines report the same ``best_edp`` with identical ``n_evals``
   (rounding snaps every engine onto the same divisor-grid candidates).
+
+The fused engine additionally shards its population axis over a device
+mesh (``SearchConfig.shards``; auto-resolved from the local device
+count by default): every op in the fused segment is per-member, so the
+scanned step runs under `shard_map` on a 1-D "pop" mesh
+(`launch.mesh.make_pop_mesh` + `sharding.rules.member_spec`) with zero
+per-segment communication — per-shard `PopulationBest` trackers are
+reduced once per run by a `lax.pmin`-style argmin collective, and the
+per-segment rounded read-backs are gathered once at the end.  Sharded
+and single-device runs are bit-identical per seed (asserted for all
+shipped specs in tests/test_sharding_multidevice.py).
+
+Start points come from the host CoSA protocol by default
+(Sec. 5.3.1); ``SearchConfig.start_points`` selects on-device seeding
+instead ("random-device" / "cosa-device", `mapping.seed_population`):
+a jittable generator over the spec's padded divisor tables, so a
+thousand-member population never materializes on host.
 """
 from __future__ import annotations
 
@@ -68,7 +85,8 @@ from .hw_infer import minimal_hw_for, random_hw_for
 from .lru import LRUCache
 from .mapping import SPATIAL, TEMPORAL, Mapping, stack_mappings
 from .mapping import unstack_mappings
-from .model import (SpecHW, capacities, capacity_penalty_spec,
+from .model import (PopulationBest, SpecHW, capacities,
+                    capacity_penalty_spec,
                     infer_hw_spec, infer_hw_population_spec,
                     layer_el_all_orderings_spec,
                     layer_el_all_orderings_population_spec,
@@ -80,6 +98,9 @@ from .oracle import evaluate_workload
 from .problem import Workload
 from .rounding import (round_all, round_population, rounding_tables,
                        _round_population_core)
+from ..launch.mesh import auto_pop_shards, make_pop_mesh
+from ..sharding.rules import (POP_AXIS, get_shard_map, member_spec,
+                              segment_member_spec)
 
 # The default target's compiled spec, hoisted to a module constant so
 # the Gemmini-default paths of `build_f` / `theta_from_mappings` touch
@@ -152,6 +173,17 @@ class SearchConfig:
     #   through the DNN residual/direct latency model (Sec. 6.5).
     #   Spec-generic: the model must be calibrated for `spec`'s
     #   featurization (core.calibration), validated at engine build.
+    shards: int | None = None          # fused-engine population shard
+    #   count over the "pop" device mesh.  None auto-resolves to the
+    #   largest divisor of the population chunk that fits the local
+    #   device count (1 on a single-device host).  Sharded and
+    #   single-device runs are bit-identical per seed; a host driver
+    #   knob only, never part of the engine cache key.
+    start_points: str = "cosa"         # "cosa": host CoSA protocol with
+    #   rejection (Sec. 5.3.1); "random-device" / "cosa-device": seed
+    #   the population ON DEVICE (`mapping.seed_population`) — fused
+    #   engine only, no start oracle evals (start_edps stays empty), so
+    #   1k-start populations never materialize on host.
 
     def __post_init__(self):
         """Fail fast on configurations that would otherwise die deep in
@@ -167,6 +199,16 @@ class SearchConfig:
                                  f"got {v!r}")
         if self.lr <= 0.0:
             raise ValueError(f"lr must be positive, got {self.lr!r}")
+        if self.shards is not None and (not isinstance(self.shards, int)
+                                        or self.shards < 1):
+            raise ValueError(f"shards must be a positive int or None "
+                             f"(auto), got {self.shards!r}")
+        if self.start_points not in ("cosa", "random-device",
+                                     "cosa-device"):
+            raise ValueError(
+                f"unknown start_points {self.start_points!r}; choose "
+                "'cosa' (host protocol), 'random-device' or "
+                "'cosa-device' (on-device seeding)")
         # A single-target surrogate must belong to this config's target:
         # a model calibrated for another spec's physics (or feature
         # width) is rejected here with calibration's own diagnostics
@@ -419,6 +461,46 @@ def _segment_lengths(steps: int, round_every: int) -> list[int]:
     return [round_every] * full + ([rem] if rem else [])
 
 
+def _reduce_population_best(best: PopulationBest,
+                            n_shards: int) -> PopulationBest:
+    """Cross-shard reduction of per-member best trackers to the single
+    global winner, `lax.pmin`-style: each shard contributes only its
+    local argmin, the global minimum EDP is a `pmin`, the winning shard
+    is the lowest-indexed one achieving it, and the winner's payload
+    (factor tensor + orders) crosses shards via a masked `psum` — one
+    (best_edp, argmin payload) over the wire instead of the whole
+    population.  Runs inside `shard_map`; returns a singleton
+    (leading axis 1), replicated across shards."""
+    i = jnp.argmin(best.edp)
+    edp_l = best.edp[i]
+    f_l, o_l = best.f[i], best.orders[i]
+    gmin = jax.lax.pmin(edp_l, POP_AXIS)
+    idx = jax.lax.axis_index(POP_AXIS)
+    winner = jax.lax.pmin(
+        jnp.where(edp_l == gmin, idx, jnp.int32(n_shards)), POP_AXIS)
+    mine = idx == winner
+    f_g = jax.lax.psum(jnp.where(mine, f_l, jnp.zeros_like(f_l)),
+                       POP_AXIS)
+    o_g = jax.lax.psum(jnp.where(mine, o_l, jnp.zeros_like(o_l)),
+                       POP_AXIS)
+    return PopulationBest(edp=gmin[None], f=f_g[None], orders=o_g[None])
+
+
+def shard_population(theta, orders, shards: int):
+    """Place a (P, ...) population on the "pop" mesh so the fused
+    engine's donated buffers match the sharded program's layout (no
+    re-layout copy, donation stays usable).  No-op at shards=1."""
+    if shards == 1:
+        return theta, orders
+    from jax.sharding import NamedSharding
+    mesh = make_pop_mesh(shards)
+    theta = jax.device_put(
+        theta, NamedSharding(mesh, member_spec(theta.ndim - 1)))
+    orders = jax.device_put(
+        orders, NamedSharding(mesh, member_spec(orders.ndim - 1)))
+    return theta, orders
+
+
 def make_fused_runner(workload: Workload, cfg: SearchConfig):
     """Build the fully device-resident search engine: ONE jitted program
     per (workload, cfg) whose outer `jax.lax.scan` runs the whole
@@ -428,14 +510,24 @@ def make_fused_runner(workload: Workload, cfg: SearchConfig):
     per population chunk and reads back only the per-segment rounded
     candidates (for oracle accounting) and the running device best.
 
-    `run_fused(theta, orders, *, n_full, rem, seg_len)` advances a
-    (P, L, 2, n_levels, 7) population through `n_full` segments of
-    `seg_len` GD steps plus an optional `rem`-step tail segment (the
-    segment schedule is static, so distinct `steps`/`round_every`
-    configurations compile their own single program).  theta and orders
-    are donated: the scan carry reuses their buffers in place.  Returns
-    ``((f_rounded, orders, model_edp), best)`` with a leading
-    per-segment axis on the first tuple.
+    `run_fused(theta, orders, *, n_full, rem, seg_len, shards=1)`
+    advances a (P, L, 2, n_levels, 7) population through `n_full`
+    segments of `seg_len` GD steps plus an optional `rem`-step tail
+    segment (the segment schedule is static, so distinct
+    `steps`/`round_every` configurations compile their own single
+    program).  theta and orders are donated: the scan carry reuses
+    their buffers in place.  Returns ``((f_rounded, orders, model_edp),
+    best)`` with a leading per-segment axis on the first tuple.
+
+    `shards > 1` runs the identical scanned step under `shard_map` on
+    the 1-D "pop" mesh, the population split `shards` ways (`shards`
+    must divide P).  Every segment op is per-member, so shards never
+    communicate during the scan and the per-member numerics — hence the
+    rounded read-backs — are bit-identical to `shards=1`.  Per-shard
+    best trackers are reduced once after the scan by a pmin-style
+    argmin collective (`_reduce_population_best`), so the sharded
+    `best` is the single global winner with leading axis 1 (at
+    `shards=1` it stays the per-member tracker).
     """
     def build():
         cspec = _cspec(cfg)
@@ -471,10 +563,7 @@ def make_fused_runner(workload: Workload, cfg: SearchConfig):
             best = population_best_update(best, edp, f_round, orders)
             return theta, orders, best, (f_round, orders, edp)
 
-        @partial(jax.jit, static_argnames=("n_full", "rem", "seg_len"),
-                 donate_argnums=(0, 1))
-        def run_fused(theta, orders, *, n_full: int, rem: int,
-                      seg_len: int):
+        def run_all(theta, orders, n_full: int, rem: int, seg_len: int):
             best = population_best_init(theta, orders)
             ys = None
             if n_full:
@@ -491,6 +580,30 @@ def make_fused_runner(workload: Workload, cfg: SearchConfig):
                 ys = tail if ys is None else jax.tree_util.tree_map(
                     lambda a, b: jnp.concatenate([a, b]), ys, tail)
             return ys, best
+
+        @partial(jax.jit,
+                 static_argnames=("n_full", "rem", "seg_len", "shards"),
+                 donate_argnums=(0, 1))
+        def run_fused(theta, orders, *, n_full: int, rem: int,
+                      seg_len: int, shards: int = 1):
+            if shards == 1:
+                return run_all(theta, orders, n_full, rem, seg_len)
+            mesh = make_pop_mesh(shards)
+
+            def sharded(theta, orders):
+                ys, best = run_all(theta, orders, n_full, rem, seg_len)
+                return ys, _reduce_population_best(best, shards)
+
+            from jax.sharding import PartitionSpec as _P
+            ys_specs = (segment_member_spec(4),   # f_round (S, P, L, 2, nl, 7)
+                        segment_member_spec(2),   # orders  (S, P, L, nl)
+                        segment_member_spec(0))   # edp     (S, P)
+            best_specs = PopulationBest(edp=_P(), f=_P(), orders=_P())
+            return get_shard_map()(
+                sharded, mesh=mesh,
+                in_specs=(member_spec(theta.ndim - 1),
+                          member_spec(orders.ndim - 1)),
+                out_specs=(ys_specs, best_specs))(theta, orders)
 
         return run_fused, dims, strides, repeats
 
@@ -733,6 +846,11 @@ def execute_search(workload: Workload, cfg: SearchConfig,
                    fused: bool = True) -> SearchResult:
     """Engine dispatch shared by `dosa_search` and the `repro.api`
     executor — the pre-façade driver, unchanged."""
+    if cfg.start_points != "cosa" and (population is None or not fused):
+        raise ValueError(
+            f"start_points={cfg.start_points!r} seeds the population on "
+            "device and only the fused engine consumes it; pass "
+            "population=P with fused=True")
     if population is not None:
         if population < 1:
             raise ValueError(f"population must be >= 1, got {population}")
@@ -844,9 +962,16 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
 
     for lo in range(0, len(starts), population):
         chunk = starts[lo:lo + population]
-        P = len(chunk)
+        n_real = len(chunk)
         for mappings in chunk:
             rec.record(mappings)
+        # Pad a ragged final chunk to `population` with replicas of the
+        # last member: every population op is per-member, so padding
+        # never perturbs the real slices, and ONE program shape covers
+        # every chunk (no second XLA compile for the tail).  Padded
+        # members are masked out of oracle accounting below.
+        chunk = chunk + [chunk[-1]] * (population - n_real)
+        P = len(chunk)
 
         theta = jnp.asarray(theta_from_population(chunk, cspec.free_mask),
                             dtype=jnp.float32)
@@ -854,7 +979,7 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
 
         for n_steps in segments:
             theta = run_segment(theta, orders, n_steps=n_steps)
-            rec.count(n_steps * P)   # one sample per GD step per start
+            rec.count(n_steps * n_real)  # one sample per GD step per start
 
             f_cont = np.asarray(jax.vmap(
                 lambda th: build_f(th, dims_j, free_mask_j))(theta))
@@ -875,7 +1000,7 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
                 for ms, no in zip(rounded_pop, new_orders):
                     for mp, o in zip(ms, no):
                         mp.order = o
-            for ms in rounded_pop:
+            for ms in rounded_pop[:n_real]:
                 rec.record(ms)
             # Continue GD from the rounded points, fresh momentum.
             theta = jnp.asarray(
@@ -897,44 +1022,79 @@ def _dosa_search_fused(workload: Workload, cfg: SearchConfig,
     are identical whenever both engines round to the same divisor-grid
     candidates (GD float drift between the two compiled forms is
     absorbed by the nearest-divisor snap; theta restarts from the same
-    integer logs each segment, so drift never accumulates)."""
+    integer logs each segment, so drift never accumulates).
+
+    The population axis is sharded over the "pop" device mesh
+    (`cfg.shards`; auto-resolved by default) — a per-member engine, so
+    the read-back, and with it every reported number, is bit-identical
+    at any shard count.  Ragged final chunks are padded to `population`
+    with replicated members (one compiled shape) and the padding masked
+    out of oracle accounting.  `cfg.start_points` in {"random-device",
+    "cosa-device"} seeds each chunk on device (`mapping.seed_population`
+    keyed on fold_in(seed, chunk)) instead of the host CoSA protocol."""
     cspec = _cspec(cfg)
-    rng = np.random.default_rng(cfg.seed)
     run_fused = make_fused_runner(workload, cfg)[0]
     rec = _Recorder(workload, cfg, cspec)
+    device_seeded = cfg.start_points != "cosa"
 
-    # ---- start generation: identical RNG stream to the other drivers.
-    starts, best_start_edp = [], float("inf")
-    for _ in range(cfg.n_start_points):
-        mappings, edp0, best_start_edp = _generate_start_point(
-            workload, cfg, rng, best_start_edp, rec)
-        rec.best.start_edps.append(edp0)
-        starts.append(mappings)
+    # ---- start generation: identical RNG stream to the other drivers
+    # (host protocol), or deferred to per-chunk device kernels.
+    starts = []
+    if not device_seeded:
+        rng = np.random.default_rng(cfg.seed)
+        best_start_edp = float("inf")
+        for _ in range(cfg.n_start_points):
+            mappings, edp0, best_start_edp = _generate_start_point(
+                workload, cfg, rng, best_start_edp, rec)
+            rec.best.start_edps.append(edp0)
+            starts.append(mappings)
 
     seg_lens = _segment_lengths(cfg.steps, cfg.round_every)
     n_full, rem = divmod(cfg.steps, cfg.round_every)
+    shards = auto_pop_shards(population, cfg.shards)
 
-    for lo in range(0, len(starts), population):
-        chunk = starts[lo:lo + population]
-        P = len(chunk)
-        for mappings in chunk:
-            rec.record(mappings)
+    for lo in range(0, cfg.n_start_points, population):
+        n_real = min(population, cfg.n_start_points - lo)
+        if device_seeded:
+            # On-device seeding: the chunk never exists on host.  Keyed
+            # by chunk index, so draws are independent of `population`
+            # chunking of the same seed only across whole chunks — and
+            # independent of `shards` entirely (the seeding program is
+            # its own unsharded dispatch).
+            from .mapping import seed_population
+            mode = ("cosa" if cfg.start_points == "cosa-device"
+                    else "random")
+            _, theta, orders = seed_population(
+                workload.dims_array(), population,
+                jax.random.fold_in(jax.random.PRNGKey(cfg.seed), lo),
+                spec=cspec, pe_cap=int(_pe_cap(cfg, cspec)), mode=mode)
+        else:
+            chunk = starts[lo:lo + population]
+            for mappings in chunk:
+                rec.record(mappings)
+            # Satellite fix: pad the ragged final chunk to `population`
+            # with replicas of its last member — per-member ops make
+            # padding inert, one program shape serves every chunk.
+            chunk = chunk + [chunk[-1]] * (population - n_real)
+            theta = jnp.asarray(
+                theta_from_population(chunk, cspec.free_mask),
+                dtype=jnp.float32)
+            orders = jnp.asarray(orders_from_population(chunk))
         if not seg_lens:
             continue
 
-        theta = jnp.asarray(theta_from_population(chunk, cspec.free_mask),
-                            dtype=jnp.float32)
-        orders = jnp.asarray(orders_from_population(chunk))
+        theta, orders = shard_population(theta, orders, shards)
         (f_seg, o_seg, _), _best = run_fused(
             theta, orders, n_full=n_full, rem=rem,
-            seg_len=cfg.round_every)
+            seg_len=cfg.round_every, shards=shards)
 
-        # ---- final read-back + oracle replay (host-batched order).
+        # ---- final read-back + oracle replay (host-batched order);
+        # gathered across shards once here, padded members skipped.
         f_seg = np.asarray(f_seg, dtype=float)     # (S, P, L, 2, nl, 7)
         o_seg = np.asarray(o_seg)                  # (S, P, L, n_levels)
         for s, n_steps in enumerate(seg_lens):
-            rec.count(n_steps * P)   # one sample per GD step per start
-            for p in range(P):
+            rec.count(n_steps * n_real)  # one sample per GD step per start
+            for p in range(n_real):
                 rec.record(unstack_mappings(f_seg[s, p], o_seg[s, p]))
 
     return rec.finish()

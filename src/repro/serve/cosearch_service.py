@@ -65,7 +65,8 @@ from ..core.problem import Workload
 from ..core.search import (SearchConfig, _Recorder, _generate_start_point,
                            _segment_lengths, engine_cache_stats,
                            make_fused_runner, orders_from_population,
-                           theta_from_population)
+                           shard_population, theta_from_population)
+from ..launch.mesh import auto_pop_shards
 from ..core.fleet import fleet_engine_cache_stats
 from ..runtime import search_checkpoint as sckpt
 
@@ -280,9 +281,17 @@ class _BatchTask:
             theta = np.concatenate([theta, np.repeat(theta[-1:], pad, 0)])
             orders = np.concatenate([orders,
                                      np.repeat(orders[-1:], pad, 0)])
-        (f_seg, o_seg, _), _best = run_fused(
+        # The service rides the sharded engine transparently: the padded
+        # population shards over the "pop" mesh (per-member ops keep the
+        # read-back bit-identical at any shard count), bounded by the
+        # batch config's `shards` knob.
+        shards = auto_pop_shards(p_pad, self.cfg0.shards)
+        theta_j, orders_j = shard_population(
             jnp.asarray(theta, dtype=jnp.float32), jnp.asarray(orders),
-            n_full=1, rem=0, seg_len=n_steps)
+            shards)
+        (f_seg, o_seg, _), _best = run_fused(
+            theta_j, orders_j, n_full=1, rem=0, seg_len=n_steps,
+            shards=shards)
         f_seg = np.asarray(f_seg, dtype=float)[0]   # (P_pad, L, 2, nl, 7)
         o_seg = np.asarray(o_seg)[0]                # (P_pad, L, n_levels)
 

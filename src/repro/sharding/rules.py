@@ -3,7 +3,11 @@
 Mesh axes (launch/mesh.py):
   * "pod"   — data parallelism across pods (DCN domain),
   * "data"  — data parallelism + FSDP/ZeRO within a pod,
-  * "model" — tensor/expert parallelism within a pod.
+  * "model" — tensor/expert parallelism within a pod,
+  * "pop"   — co-search population / fleet-member axis (its own 1-D
+    mesh, `launch.mesh.make_pop_mesh`): the fused one-loop engines
+    shard their embarrassingly-parallel member axis over it, with
+    best-tracking reduced by pmin-style collectives.
 
 Parallelism map (DESIGN.md Sec. 8):
   * batch:       ("pod", "data")
@@ -64,6 +68,32 @@ def spec(*logical: str | None) -> P:
 
 def batch_spec(extra_dims: int = 1) -> P:
     return P(("pod", "data"), *([None] * extra_dims))
+
+
+# --- population ("pop") axis specs for the sharded co-search engines.
+POP_AXIS = "pop"
+LOGICAL_RULES["members"] = POP_AXIS     # population / fleet-member axis
+
+def member_spec(extra_dims: int = 0) -> P:
+    """(P, ...) member-leading tensors: theta, orders, SpecParams
+    leaves.  `extra_dims` trailing dims stay unsharded."""
+    return P(POP_AXIS, *([None] * extra_dims))
+
+
+def segment_member_spec(extra_dims: int = 0) -> P:
+    """(S, P, ...) per-segment stacked outputs of the fused scan: the
+    segment axis leads, the member axis is sharded."""
+    return P(None, POP_AXIS, *([None] * extra_dims))
+
+
+def get_shard_map():
+    """`shard_map` across jax versions: `jax.experimental.shard_map`
+    on 0.4.x, promoted to `jax.shard_map` later."""
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:             # pragma: no cover - newer jax
+        from jax import shard_map
+    return shard_map
 
 
 # Activation constraint specs.  Attention uses Ulysses-style sequence

@@ -165,6 +165,21 @@ def test_fused_is_single_compiled_program(two_layer_workload):
     assert run_fused._cache_size() == 1
 
 
+def test_ragged_final_chunk_does_not_recompile(two_layer_workload):
+    """A ragged last chunk (n_start_points % population != 0) pads to
+    the population shape with inert replicated members instead of
+    compiling a second program — and the padding stays invisible to
+    accounting (host-batched parity pins that)."""
+    cfg = SearchConfig(steps=40, round_every=20, n_start_points=3, seed=2,
+                       ordering_mode="none")
+    host = dosa_search(two_layer_workload, cfg, population=2, fused=False)
+    fus = dosa_search(two_layer_workload, cfg, population=2, fused=True)
+    assert fus.best_edp == host.best_edp
+    assert fus.n_evals == host.n_evals
+    run_fused, *_ = make_fused_runner(two_layer_workload, cfg)
+    assert run_fused._cache_size() == 1
+
+
 def test_fused_fixed_hw_mode(two_layer_workload):
     from repro.core.arch import GEMMINI_DEFAULT
     cfg = SearchConfig(steps=40, round_every=20, n_start_points=2, seed=1,
