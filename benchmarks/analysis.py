@@ -1,0 +1,40 @@
+"""Trace-hygiene static analysis as a benchmark/CI gate.
+
+Runs the full `repro.analysis` report — AST lint over `src/` against
+the checked-in baseline, SP5xx spec lint of every shipped ArchSpec,
+and the live trace contracts (transfer_free under
+`jax.transfer_guard("disallow")`, no_recompile for the fused search /
+fleet / serving engines, no_f64_constants) — and writes
+`analysis_report.json` into bench_results/.  A non-ok report raises,
+so `python -m benchmarks.run analysis` gates exactly like the CLI
+(`python -m repro.analysis`).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from .common import OUTPUT_DIR, Row, Timer
+
+
+def run(scale: str) -> list[Row]:
+    from repro.analysis.report import build_report, write_report
+
+    root = Path(__file__).resolve().parents[1]
+    with Timer() as t:
+        report = build_report(root, run_contracts=True)
+    OUTPUT_DIR.mkdir(parents=True, exist_ok=True)
+    write_report(report, OUTPUT_DIR / "analysis_report.json")
+
+    lint = report["lint"]
+    checks = {name: c["passed"]
+              for name, c in report["contracts"]["checks"].items()
+              if isinstance(c, dict)}
+    if not report["ok"]:
+        raise AssertionError(
+            f"analysis not clean: {len(lint['new'])} new lint "
+            f"finding(s), spec lint ok={report['spec_lint']['ok']}, "
+            f"contracts={checks}")
+    derived = (f"lint={lint['total']}v/{len(lint['new'])}new/"
+               f"{len(lint['baseline_diff']['fixed'])}fixed "
+               f"contracts={sum(checks.values())}/{len(checks)}ok")
+    return [Row("analysis", t.us(), derived)]

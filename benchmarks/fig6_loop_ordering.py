@@ -6,7 +6,6 @@ Paper: after ~7000 samples, Iterate improves EDP 1.70x and Softmax
 1.58x over the no-search baseline."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.search import SearchConfig, dosa_search
 from repro.workloads import dnn_zoo

@@ -18,7 +18,7 @@ from repro.core.oracle import evaluate, evaluate_workload
 from repro.core.search import SearchConfig, dosa_search
 from repro.workloads import dnn_zoo
 
-from .common import Row, Timer, geomean, save_json
+from .common import Row, geomean, save_json
 
 WORKLOADS = ("unet", "resnet50", "bert", "retinanet")
 

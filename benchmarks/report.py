@@ -11,7 +11,6 @@ import json
 from pathlib import Path
 
 from repro.configs import get_config
-from repro.configs.base import SHAPES
 
 from .roofline import analyze_cell
 

@@ -13,9 +13,10 @@ from .common import scale
 
 BENCHES = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10_11", "fig12",
            "roofline", "tpu_autotune", "multi_target", "fleet", "timing",
-           "calibration", "serve")
+           "calibration", "serve", "analysis")
 
 _MODULES = {
+    "analysis": "benchmarks.analysis",
     "multi_target": "benchmarks.multi_target",
     "fleet": "benchmarks.fleet",
     "timing": "benchmarks.timing",
@@ -36,6 +37,7 @@ _MODULES = {
 # registered benchmark that "passes" without its artifact is a silent
 # reporting regression, so the driver fails the run.
 _ARTIFACTS = {
+    "analysis": ("analysis_report.json",),
     "multi_target": ("multi_target.json",),
     "fleet": ("fleet.json", "fleet_frontier.csv"),
     "timing": ("search_timing.json",),

@@ -6,7 +6,6 @@ running the tuned kernel (interpret mode on CPU) against the oracle.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.autotune import tune_matmul_blocks
 from repro.core.tpu_model import matmul_latency

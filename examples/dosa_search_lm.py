@@ -7,7 +7,8 @@ Runs the batched multi-start engine by default (all start points
 advance through one scanned/vmapped GD program); pass ``--sequential``
 to use the per-start reference driver instead.
 
-    PYTHONPATH=src python examples/dosa_search_lm.py [arch] [shape] [--sequential]
+    PYTHONPATH=src python examples/dosa_search_lm.py [arch] [shape] \
+        [--sequential]
 """
 import sys
 

@@ -1,0 +1,35 @@
+"""Trace-hygiene static analysis for the one-loop search engine.
+
+Every headline number this repo reports — bit-identical sharded
+parity, warm-serve p50, the calibrated-search win — depends on
+properties the type system cannot see: the fused engine compiles
+exactly once, its segment loop never touches the host, no float64
+constant leaks into a float32 trace, and every `ArchSpec` the engines
+evaluate is well-formed.  This package turns those implicit contracts
+into checked, CI-gated invariants:
+
+* `astlint` + `rules` — custom JAX-hazard lint rules run over the
+  source tree (numpy calls and Python branching inside traced bodies,
+  unseeded nondeterminism in engine code, float64 literal leaks,
+  `jax.jit` without buffer donation on large carries, exception
+  swallowing in runtime paths, mutable default arguments), with a
+  checked-in baseline so accepted legacy patterns don't block CI while
+  new violations fail it;
+* `contracts` — a declarative trace-contract API (`no_recompile`,
+  `transfer_free`, `no_f64_constants`, `jaxpr_fingerprint`) that
+  replaces ad-hoc `_cache_size() == 1` assertions as the one way
+  engine compile/transfer contracts are stated;
+* `speclint` — static validation of `ArchSpec` declarations (binding
+  matrix, tensor chains, EPA/bandwidth positivity, rounding-site
+  invariants), invoked by `archspec.compile_spec` and standalone;
+* `python -m repro.analysis` — the CLI gluing all three into one
+  machine-readable report (`bench_results/analysis_report.json`),
+  gated in CI by the `analyze` job.
+"""
+from .astlint import LintViolation, lint_paths, lint_source  # noqa: F401
+from .contracts import (ContractError, ContractResult,  # noqa: F401
+                        assert_no_recompile, compiled_programs,
+                        jaxpr_fingerprint, no_f64_constants, no_recompile,
+                        transfer_free)
+from .rules import RULES, Rule  # noqa: F401
+from .speclint import SpecIssue, SpecLintError, lint_spec  # noqa: F401

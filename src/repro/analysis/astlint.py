@@ -1,0 +1,404 @@
+"""AST lint pass: applies the `rules` catalog over Python sources.
+
+The linter is deliberately heuristic — it over-approximates "traced
+code" (anything lexically inside a jit-decorated function or a
+`lax.scan`/`shard_map` body) and lets the checked-in baseline absorb
+accepted patterns (e.g. trace-time numpy table construction inside an
+engine-build closure).  What it guarantees is *ratchet* semantics: a
+NEW hazard anywhere in the tree fails CI until it is either fixed or
+deliberately baselined/suppressed with a reason.
+
+Fingerprints are content-based — ``(rule, path, enclosing scope,
+stripped source line)`` — so violations survive unrelated line shifts;
+identical lines in one scope disambiguate by occurrence index.
+
+Inline suppression: ``# repro-lint: allow[RULE_ID]`` on the flagged
+line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+
+from .rules import RULES
+
+# Parameter names that mark a jitted function as carrying a large
+# population/parameter buffer (JX104: donation expected).
+_CARRY_PARAM_NAMES = frozenset(
+    {"theta", "population", "params", "state", "opt_state", "carry"})
+
+_NP_MODULE_NAMES = frozenset({"np", "numpy"})
+_SCAN_FUNCS = frozenset({"scan", "shard_map", "fori_loop", "while_loop"})
+_WALLCLOCK_FUNCS = frozenset(
+    {"time", "perf_counter", "perf_counter_ns", "monotonic", "time_ns"})
+# Legacy global-stream numpy RNG entry points (always unseeded).
+_NP_RANDOM_GLOBAL = frozenset(
+    {"rand", "randn", "randint", "random", "uniform", "normal", "choice",
+     "permutation", "shuffle", "random_sample", "standard_normal"})
+_STDLIB_RANDOM_FUNCS = frozenset(
+    {"random", "randint", "randrange", "uniform", "normal", "gauss",
+     "choice", "choices", "shuffle", "sample", "betavariate"})
+
+
+@dataclasses.dataclass
+class LintViolation:
+    rule: str
+    path: str                 # POSIX relpath from the lint root
+    line: int
+    col: int
+    scope: str                # enclosing qualname ("<module>" at top)
+    snippet: str              # stripped source line
+    message: str
+    fingerprint: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.scope}] {self.snippet!r}\n    -> {self.message}")
+
+
+def _fingerprint(rule: str, path: str, scope: str, snippet: str,
+                 occurrence: int) -> str:
+    key = f"{rule}|{path}|{scope}|{snippet}|{occurrence}"
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain ('jax.lax.scan'), or ''."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """Does this expression denote jax.jit (possibly through
+    functools.partial(jax.jit, ...))?"""
+    chain = _attr_chain(node)
+    if chain in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call):
+        head = _attr_chain(node.func)
+        if head in ("partial", "functools.partial") and node.args:
+            return _is_jit_expr(node.args[0])
+    return False
+
+
+def _jit_call_kwargs(node: ast.AST) -> list[ast.keyword]:
+    """Keywords of the jit(...) / partial(jax.jit, ...) call, if any."""
+    if isinstance(node, ast.Call):
+        head = _attr_chain(node.func)
+        if head in ("jax.jit", "jit"):
+            return node.keywords
+        if head in ("partial", "functools.partial") and node.args \
+                and _is_jit_expr(node.args[0]):
+            return node.keywords
+    return []
+
+
+def _is_f64_ref(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    if chain in ("np.float64", "numpy.float64", "jnp.float64",
+                 "jax.numpy.float64"):
+        return True
+    # builtin `float` as a dtype= value is float64 in numpy
+    return isinstance(node, ast.Name) and node.id == "float"
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, tree: ast.Module, relpath: str, lines: list[str]):
+        self.relpath = relpath
+        self.lines = lines
+        self.violations: list[LintViolation] = []
+        self._seen: dict[tuple, int] = {}     # dedup/occurrence counter
+        self.scope: list[str] = []
+        # traced-context depth counters (lexical nesting)
+        self._jit_depth = 0
+        self._scan_body_depth = 0
+        self._scan_bodies = _collect_scan_bodies(tree)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _qualname(self) -> str:
+        return ".".join(self.scope) if self.scope else "<module>"
+
+    def _line(self, node: ast.AST) -> str:
+        try:
+            return self.lines[node.lineno - 1].strip()
+        except (IndexError, AttributeError):
+            return ""
+
+    def _suppressed(self, node: ast.AST, rule: str) -> bool:
+        return f"repro-lint: allow[{rule}]" in self._line(node)
+
+    def report(self, rule: str, node: ast.AST) -> None:
+        r = RULES[rule]
+        if r.path_filters and not any(f in self.relpath
+                                      for f in r.path_filters):
+            return
+        if self._suppressed(node, rule):
+            return
+        scope = self._qualname()
+        snippet = self._line(node)
+        key = (rule, scope, snippet)
+        occ = self._seen.get(key, 0)
+        self._seen[key] = occ + 1
+        self.violations.append(LintViolation(
+            rule=rule, path=self.relpath, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), scope=scope,
+            snippet=snippet, message=r.message,
+            fingerprint=_fingerprint(rule, self.relpath, scope, snippet,
+                                     occ)))
+
+    @property
+    def _in_traced(self) -> bool:
+        return self._jit_depth > 0 or self._scan_body_depth > 0
+
+    # -- function defs: traced-context tracking + JX104 + PY401 -----------
+
+    def _visit_func(self, node) -> None:
+        is_jit = any(_is_jit_expr(d) for d in node.decorator_list)
+        is_scan_body = id(node) in self._scan_bodies
+        self.scope.append(node.name)
+        if is_jit:
+            self._check_donation(node, node.decorator_list)
+        self._check_mutable_defaults(node)
+        self._jit_depth += int(is_jit)
+        self._scan_body_depth += int(is_scan_body)
+        self.generic_visit(node)
+        self._scan_body_depth -= int(is_scan_body)
+        self._jit_depth -= int(is_jit)
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        is_scan_body = id(node) in self._scan_bodies
+        self.scope.append("<lambda>")
+        self._scan_body_depth += int(is_scan_body)
+        self.generic_visit(node)
+        self._scan_body_depth -= int(is_scan_body)
+        self.scope.pop()
+
+    def _check_donation(self, func, decorators) -> None:
+        params = {a.arg for a in (func.args.args
+                                  + func.args.posonlyargs
+                                  + func.args.kwonlyargs)}
+        if not (params & _CARRY_PARAM_NAMES):
+            return
+        for dec in decorators:
+            for kw in _jit_call_kwargs(dec):
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    return
+            if _attr_chain(dec) in ("jax.jit", "jit"):
+                # bare @jax.jit, no kwargs at all
+                pass
+        self.report("JX104", func)
+
+    def _check_mutable_defaults(self, func) -> None:
+        defaults = list(func.args.defaults) + [
+            d for d in func.args.kw_defaults if d is not None]
+        for d in defaults:
+            if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                self.report("PY401", d)
+            elif isinstance(d, ast.Call) and \
+                    _attr_chain(d.func) in ("list", "dict", "set"):
+                self.report("PY401", d)
+
+    # -- statements inside scan bodies (JX102) -----------------------------
+
+    def visit_If(self, node: ast.If) -> None:
+        if self._scan_body_depth > 0:
+            self.report("JX102", node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._scan_body_depth > 0:
+            self.report("JX102", node)
+        self.generic_visit(node)
+
+    # -- calls: JX101 / JX103 / ND201 / ND202 / expression-form jit -------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        head = chain.split(".")[0] if chain else ""
+
+        if self._in_traced and head in _NP_MODULE_NAMES:
+            self.report("JX101", node)
+
+        if self._in_traced:
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_f64_ref(kw.value):
+                    self.report("JX103", node)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and _is_f64_ref(node.args[0]):
+                self.report("JX103", node)
+
+        # nondeterminism (path-filtered to engine code by the rule)
+        if chain.startswith(("np.random.", "numpy.random.")):
+            fn = chain.rsplit(".", 1)[1]
+            if fn in _NP_RANDOM_GLOBAL:
+                self.report("ND201", node)
+            elif fn == "default_rng" and not node.args:
+                self.report("ND201", node)
+        elif head == "random" and "." in chain \
+                and chain.rsplit(".", 1)[1] in _STDLIB_RANDOM_FUNCS:
+            self.report("ND201", node)
+        elif chain in (f"time.{f}" for f in _WALLCLOCK_FUNCS):
+            self.report("ND202", node)
+
+        # expression-form jit over a named function: resolve params
+        if _is_jit_expr(node.func) is False and _attr_chain(node.func) \
+                in ("jax.jit", "jit"):
+            pass  # unreachable; kept for clarity
+        self.generic_visit(node)
+
+    # -- exception hygiene (EX301) ----------------------------------------
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        broad = node.type is None or _names_exception(node.type)
+        if broad and not any(isinstance(n, ast.Raise)
+                             for stmt in node.body
+                             for n in ast.walk(stmt)):
+            self.report("EX301", node)
+        self.generic_visit(node)
+
+
+def _names_exception(node: ast.AST) -> bool:
+    if isinstance(node, ast.Tuple):
+        return any(_names_exception(e) for e in node.elts)
+    return _attr_chain(node) in ("Exception", "BaseException")
+
+
+def _collect_scan_bodies(tree: ast.Module) -> set[int]:
+    """ids of FunctionDef/Lambda nodes passed (by name or inline) to
+    lax.scan / shard_map / fori_loop / while_loop within the same
+    lexical scope."""
+    body_names: set[tuple[int, str]] = set()    # (scope id, name)
+    inline: set[int] = set()
+
+    class _Finder(ast.NodeVisitor):
+        def __init__(self):
+            self.scopes: list[ast.AST] = [tree]
+
+        def _scoped(self, node):
+            self.scopes.append(node)
+            self.generic_visit(node)
+            self.scopes.pop()
+
+        visit_FunctionDef = _scoped
+        visit_AsyncFunctionDef = _scoped
+
+        def visit_Call(self, node: ast.Call) -> None:
+            chain = _attr_chain(node.func)
+            leaf = chain.rsplit(".", 1)[-1] if chain else ""
+            if leaf in _SCAN_FUNCS and node.args:
+                cand = node.args[0]
+                # fori_loop/while_loop take the body at index 1/2
+                if leaf == "fori_loop" and len(node.args) > 2:
+                    cand = node.args[2]
+                elif leaf == "while_loop" and len(node.args) > 1:
+                    cand = node.args[1]
+                if isinstance(cand, ast.Lambda):
+                    inline.add(id(cand))
+                elif isinstance(cand, ast.Name):
+                    for sc in self.scopes:
+                        body_names.add((id(sc), cand.id))
+            self.generic_visit(node)
+
+    _Finder().visit(tree)
+
+    bodies: set[int] = set(inline)
+
+    class _Marker(ast.NodeVisitor):
+        def __init__(self):
+            self.scopes: list[ast.AST] = [tree]
+
+        def _scoped(self, node):
+            if any((id(sc), node.name) in body_names
+                   for sc in self.scopes):
+                bodies.add(id(node))
+            self.scopes.append(node)
+            self.generic_visit(node)
+            self.scopes.pop()
+
+        visit_FunctionDef = _scoped
+        visit_AsyncFunctionDef = _scoped
+
+    _Marker().visit(tree)
+    return bodies
+
+
+def lint_source(source: str, relpath: str) -> list[LintViolation]:
+    """Lint one file's source text; `relpath` keys fingerprints and
+    path-filtered rules (use POSIX separators)."""
+    tree = ast.parse(source, filename=relpath)
+    linter = _Linter(tree, relpath, source.splitlines())
+    linter.visit(tree)
+    return sorted(linter.violations, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_paths(root: str | Path,
+               subdirs: tuple[str, ...] = ("src",)) -> list[LintViolation]:
+    """Lint every ``*.py`` under ``root/<subdir>`` for each subdir.
+    Returns violations sorted by (path, line, rule)."""
+    root = Path(root)
+    out: list[LintViolation] = []
+    for sub in subdirs:
+        base = root / sub
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            rel = p.relative_to(root).as_posix()
+            out.extend(lint_source(p.read_text(), rel))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+# ---------------------------------------------------------------------------
+# Baseline: the ratchet.  `analysis_baseline.json` holds fingerprints of
+# accepted violations; a scan classifies each finding as new (fails CI),
+# baselined (accepted), and each baseline entry with no current match as
+# fixed (the baseline diff the report publishes).
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str | Path) -> dict:
+    p = Path(path)
+    if not p.exists():
+        return {"version": 1, "entries": []}
+    return json.loads(p.read_text())
+
+
+def save_baseline(path: str | Path, violations: list[LintViolation],
+                  notes: dict[str, str] | None = None) -> None:
+    entries = [{"fingerprint": v.fingerprint, "rule": v.rule,
+                "path": v.path, "scope": v.scope, "snippet": v.snippet,
+                **({"note": notes[v.fingerprint]}
+                   if notes and v.fingerprint in notes else {})}
+               for v in violations]
+    Path(path).write_text(json.dumps(
+        {"version": 1, "entries": entries}, indent=1) + "\n")
+
+
+def diff_baseline(violations: list[LintViolation], baseline: dict
+                  ) -> tuple[list[LintViolation], list[LintViolation],
+                             list[dict]]:
+    """(new, baselined, fixed): violations not in the baseline, those
+    accepted by it, and baseline entries with no current match (fixed
+    or moved — the ratchet's progress report)."""
+    known = {e["fingerprint"]: e for e in baseline.get("entries", [])}
+    new = [v for v in violations if v.fingerprint not in known]
+    old = [v for v in violations if v.fingerprint in known]
+    live = {v.fingerprint for v in violations}
+    fixed = [e for fp, e in known.items() if fp not in live]
+    return new, old, fixed

@@ -1,0 +1,148 @@
+"""Declarative trace contracts for the fused engines.
+
+The engine layer's performance story rests on three properties that
+unit tests used to assert ad hoc (``run_fused._cache_size() == 1``
+sprinkled through the suite):
+
+* **no_recompile** — a driver loop hits exactly one compiled program,
+  however many segment shapes it replays;
+* **transfer_free** — a warm fused call completes start-to-finish
+  under ``jax.transfer_guard("disallow")``: the segment loop never
+  bounces through the host;
+* **no_f64_constants** — the lowered program carries no float64
+  constant (a silent upcast that doubles memory traffic, or a crash
+  under ``jax_enable_x64=False``).
+
+Each check returns a `ContractResult`; the ``assert_*`` variants raise
+`ContractError` for use directly in tests.  `jaxpr_fingerprint` hashes
+the lowered program text so callers can pin "same trace" across
+refactors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+
+
+class ContractError(AssertionError):
+    """A trace contract did not hold."""
+
+
+@dataclasses.dataclass
+class ContractResult:
+    name: str
+    passed: bool
+    detail: str = ""
+
+    def __bool__(self) -> bool:
+        return self.passed
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def check(self) -> "ContractResult":
+        if not self.passed:
+            raise ContractError(f"{self.name}: {self.detail}")
+        return self
+
+
+def compiled_programs(engine: Callable) -> int:
+    """Number of compiled programs behind a jitted engine (its jit
+    cache size).  Works for `search.make_fused_runner` /
+    `fleet.make_fused_fleet_runner` engines and any ``jax.jit`` fn."""
+    size = getattr(engine, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{engine!r} exposes no _cache_size(); pass the jitted "
+            "engine returned by make_fused_runner / jax.jit")
+    return size()
+
+
+def no_recompile(engine: Callable,
+                 calls: Iterable[Callable[[], Any]] = (),
+                 expected: int = 1) -> ContractResult:
+    """Run ``calls`` (zero-arg thunks invoking ``engine``) and check
+    the engine compiled exactly ``expected`` program(s) in total —
+    varying population shapes, segment lengths and request mixes must
+    all reuse one executable."""
+    for i, thunk in enumerate(calls):
+        try:
+            jax.block_until_ready(thunk())
+        # the checker's job is to REPORT any failure, not to crash
+        except Exception as e:  # repro-lint: allow[EX301]
+            return ContractResult(
+                "no_recompile", False, f"call #{i} raised {e!r}")
+    n = compiled_programs(engine)
+    return ContractResult(
+        "no_recompile", n == expected,
+        f"engine compiled {n} program(s), expected {expected}")
+
+
+def assert_no_recompile(engine: Callable,
+                        calls: Iterable[Callable[[], Any]] = (),
+                        expected: int = 1) -> None:
+    no_recompile(engine, calls, expected).check()
+
+
+def transfer_free(fn: Callable,
+                  make_args: Callable[[], tuple[Sequence, dict]],
+                  warmup: bool = True) -> ContractResult:
+    """Prove a warm ``fn`` call is host-transfer-free.
+
+    ``make_args()`` returns ``(args, kwargs)`` with every traced array
+    already on device (``jax.device_put``); it is invoked once per
+    call because donated engines (``donate_argnums``) consume their
+    input buffers.  The warm-up call (compilation — which legitimately
+    transfers trace-time constants) runs OUTSIDE the guard; the
+    measured call plus ``block_until_ready`` run inside
+    ``jax.transfer_guard("disallow")``, so any implicit host hop in
+    the fused loop raises."""
+    if warmup:
+        args, kwargs = make_args()
+        jax.block_until_ready(fn(*args, **kwargs))
+    args, kwargs = make_args()
+    try:
+        with jax.transfer_guard("disallow"):
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
+    # any failure inside the guard IS the finding being reported
+    except Exception as e:  # repro-lint: allow[EX301]
+        return ContractResult(
+            "transfer_free", False,
+            f"host transfer inside guarded call: {e!r}")
+    return ContractResult(
+        "transfer_free", True,
+        "warm call completed under transfer_guard('disallow')")
+
+
+def _lowered_text(fn: Callable, *args, **kwargs) -> str:
+    lower = getattr(fn, "lower", None)
+    if lower is None:
+        lower = jax.jit(fn).lower
+    return lower(*args, **kwargs).as_text()
+
+
+_F64_RE = re.compile(r"\bf64\b|xf64[,>x]|f64>")
+
+
+def no_f64_constants(fn: Callable, *args, **kwargs) -> ContractResult:
+    """Scan the lowered (StableHLO) program for any float64 type —
+    engine traces are float32 end to end, so a single ``f64`` token
+    means a literal or host table leaked in at trace time."""
+    text = _lowered_text(fn, *args, **kwargs)
+    hits = sorted({m.group(0) for m in _F64_RE.finditer(text)})
+    return ContractResult(
+        "no_f64_constants", not hits,
+        "no f64 types in lowered program" if not hits
+        else f"float64 leaked into the trace: {hits}")
+
+
+def jaxpr_fingerprint(fn: Callable, *args, **kwargs) -> str:
+    """Stable hash of the lowered program text — pins 'this call
+    traces to the same program' across refactors."""
+    text = _lowered_text(fn, *args, **kwargs)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]

@@ -1,0 +1,179 @@
+"""Assemble the machine-readable analysis report.
+
+One entry point, `build_report`, glues the three analysis parts
+together — AST lint over ``src/`` against the checked-in baseline,
+spec lint over every shipped `ArchSpec`, and the engine contract smoke
+(compile-once / transfer-free / no-f64 on the search, fleet and
+serving paths) — into the JSON document CI uploads
+(``bench_results/analysis_report.json``).
+
+``report["ok"]`` is the CI gate: true iff the new-violation set is
+empty, every shipped spec lints clean, and every contract holds.
+Baseline entries with no current match are reported under
+``baseline_diff["fixed"]`` — the ratchet's progress ledger, not a
+failure.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+from . import astlint, contracts
+
+DEFAULT_BASELINE = Path(__file__).with_name("analysis_baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# Part 1+3: lint + spec lint
+# ---------------------------------------------------------------------------
+
+def lint_section(root: Path, baseline_path: Path) -> dict:
+    violations = astlint.lint_paths(root, subdirs=("src",))
+    baseline = astlint.load_baseline(baseline_path)
+    new, old, fixed = astlint.diff_baseline(violations, baseline)
+    return {
+        "total": len(violations),
+        "by_rule": dict(sorted(Counter(v.rule for v in violations)
+                               .items())),
+        "new": [v.to_json() for v in new],
+        "baselined": len(old),
+        "baseline_diff": {
+            "new": [v.fingerprint for v in new],
+            "fixed": fixed,          # full baseline entries, now clean
+        },
+        "ok": not new,
+    }
+
+
+def speclint_section() -> dict:
+    from repro.core.archspec import (EDGE_SPEC, GEMMINI_SPEC, TPU_V5E_SPEC)
+    from .speclint import lint_spec
+    specs = {s.name: s for s in (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC)}
+    issues = {name: [i.to_json() for i in lint_spec(s)]
+              for name, s in specs.items()}
+    return {"specs": issues,
+            "ok": not any(v for v in issues.values())}
+
+
+# ---------------------------------------------------------------------------
+# Part 2: engine contract smoke.  Tiny seeded searches — enough to
+# compile each engine family once and prove the contracts on the real
+# code paths, small enough for a CI job.
+# ---------------------------------------------------------------------------
+
+def _smoke_workload():
+    from repro.core.problem import Layer, Workload
+    return Workload(layers=(Layer.matmul(64, 64, 64, name="m"),),
+                    name="analysis_smoke")
+
+
+def _smoke_cfg(**kw):
+    from repro.core.search import SearchConfig
+    return SearchConfig(steps=20, round_every=10, n_start_points=2,
+                        seed=0, **kw)
+
+
+def _search_contracts() -> dict:
+    import jax
+    import numpy as np
+    from repro.core.archspec import GEMMINI_SPEC, compile_spec
+    from repro.core.search import (generate_start_points, make_fused_runner,
+                                   orders_from_population,
+                                   theta_from_population)
+
+    wl, cfg = _smoke_workload(), _smoke_cfg()
+    starts, _, _ = generate_start_points(wl, cfg)
+    run_fused, *_ = make_fused_runner(wl, cfg)
+    cspec = compile_spec(GEMMINI_SPEC)
+    theta = np.asarray(theta_from_population(starts, cspec.free_mask),
+                       dtype=np.float32)
+    orders = np.asarray(orders_from_population(starts))
+    statics = dict(n_full=2, rem=0, seg_len=10)
+
+    def make_args():
+        # fresh device copies every call: the engine donates its carry
+        return (jax.device_put(theta), jax.device_put(orders)), statics
+
+    out = {}
+    out["search.transfer_free"] = contracts.transfer_free(
+        run_fused, make_args).to_json()
+    calls = [lambda: run_fused(*make_args()[0], **statics)] * 2
+    out["search.no_recompile"] = contracts.no_recompile(
+        run_fused, calls).to_json()
+    out["search.no_f64_constants"] = contracts.no_f64_constants(
+        run_fused, jax.device_put(theta), jax.device_put(orders),
+        **statics).to_json()
+    out["search.jaxpr_fingerprint"] = contracts.jaxpr_fingerprint(
+        run_fused, jax.device_put(theta), jax.device_put(orders),
+        **statics)
+    return out
+
+
+def _fleet_contracts() -> dict:
+    from repro.core.archspec import EDGE_SPEC, TPU_V5E_SPEC
+    from repro.core.fleet import fleet_search, make_fused_fleet_runner
+
+    wl, cfg = _smoke_workload(), _smoke_cfg()
+    specs = [TPU_V5E_SPEC, EDGE_SPEC]      # one structural group
+    fleet_search(wl, specs, cfg, fused=True)
+    fleet_search(wl, specs, cfg, fused=True)   # warm reuse, no retrace
+    engine = make_fused_fleet_runner(wl, specs, cfg)
+    return {"fleet.no_recompile":
+            contracts.no_recompile(engine, ()).to_json()}
+
+
+def _serve_contracts() -> dict:
+    import dataclasses
+    from repro.api import SearchRequest
+    from repro.core.search import make_fused_runner
+    from repro.serve.cosearch_service import CoSearchService, ServiceConfig
+
+    wl, cfg = _smoke_workload(), _smoke_cfg()
+    svc = CoSearchService(ServiceConfig(bucket_workloads=True))
+    for seed in (0, 1, 2):
+        svc.submit(SearchRequest(
+            workload=wl, config=dataclasses.replace(cfg, seed=seed)))
+    svc.drain()
+    task = svc._tasks[0]
+    engine = make_fused_runner(task.workload, task.cfg0)[0]
+    return {"serve.no_recompile":
+            contracts.no_recompile(engine, ()).to_json()}
+
+
+def contracts_section() -> dict:
+    results: dict = {}
+    for part in (_search_contracts, _fleet_contracts, _serve_contracts):
+        results.update(part())
+    ok = all(r["passed"] for r in results.values()
+             if isinstance(r, dict) and "passed" in r)
+    return {"checks": results, "ok": ok}
+
+
+# ---------------------------------------------------------------------------
+# Glue
+# ---------------------------------------------------------------------------
+
+def build_report(root: str | Path, baseline_path: str | Path | None = None,
+                 run_contracts: bool = True) -> dict:
+    root = Path(root)
+    baseline_path = Path(baseline_path or DEFAULT_BASELINE)
+    report = {
+        "version": 1,
+        "root": str(root),
+        "lint": lint_section(root, baseline_path),
+        "spec_lint": speclint_section(),
+    }
+    if run_contracts:
+        report["contracts"] = contracts_section()
+    report["ok"] = all(report[k]["ok"] for k in
+                       ("lint", "spec_lint") + (("contracts",)
+                                                if run_contracts else ()))
+    return report
+
+
+def write_report(report: dict, out_path: str | Path) -> Path:
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    return out

@@ -1,0 +1,86 @@
+"""Lint-rule catalog: every rule the AST pass enforces, with its ID,
+rationale and an actionable message.
+
+Rule families:
+
+* ``JX1xx`` — JAX trace hazards: code that silently degrades or breaks
+  a jitted program (host numpy inside traced bodies, Python control
+  flow inside scan/shard_map bodies, float64 literals in float32
+  traces, missing buffer donation on large carried populations).
+* ``ND2xx`` — nondeterminism in engine code: unseeded RNG streams and
+  wall-clock reads make seeded bit-identical parity (the repo's core
+  testing contract) impossible to uphold.
+* ``EX3xx`` — exception hygiene in runtime/fault paths: a broad
+  ``except`` that swallows is how preemptions, OOMs and real bugs
+  disappear silently from a serving loop.
+* ``PY4xx`` — Python footguns (mutable default arguments).
+
+A rule fires as a `LintViolation` (see `astlint`).  Existing accepted
+patterns live in the checked-in baseline (``analysis_baseline.json``);
+new violations fail CI.  Inline suppression: append
+``# repro-lint: allow[RULE_ID]`` (with a reason in a nearby comment)
+to the flagged line.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    message: str           # actionable: what to do instead
+    # Restrict the rule to paths containing one of these fragments
+    # (POSIX relpaths); empty tuple = everywhere.
+    path_filters: tuple[str, ...] = ()
+
+
+RULES: dict[str, Rule] = {r.id: r for r in (
+    Rule(
+        "JX101", "numpy-in-traced-body",
+        "np.* call inside a jit/scan/shard_map-traced body executes on "
+        "host at trace time (constant-folded) or breaks on tracers; use "
+        "jnp.* for traced values, or hoist genuinely-static tables out "
+        "of the traced function"),
+    Rule(
+        "JX102", "python-branch-in-scan-body",
+        "Python `if`/`while` inside a lax.scan/shard_map body branches "
+        "at trace time, not per step; use jnp.where/lax.cond/lax.select "
+        "for value-dependent control flow"),
+    Rule(
+        "JX103", "f64-literal-in-traced-body",
+        "float64 dtype inside a traced body silently upcasts (or dies "
+        "under jax_enable_x64=False); keep traced constants float32, or "
+        "compute in float64 on host and cast once at the boundary"),
+    Rule(
+        "JX104", "jit-without-donation",
+        "jax.jit over a large carried buffer (population/theta/params "
+        "state) without donate_argnums holds two live copies per call; "
+        "donate the carry so XLA reuses its buffer in place"),
+    Rule(
+        "ND201", "unseeded-rng-in-engine",
+        "unseeded RNG (np.random.* legacy global stream / "
+        "random.* / default_rng()) in engine code breaks seeded "
+        "bit-identical parity; thread an explicit seeded "
+        "np.random.default_rng(seed) / jax.random.PRNGKey through",
+        path_filters=("src/repro/core/", "src/repro/serve/",
+                      "src/repro/runtime/", "src/repro/sharding/")),
+    Rule(
+        "ND202", "wallclock-in-engine",
+        "wall-clock read (time.time/perf_counter) in engine code makes "
+        "results run-dependent; timing belongs in benchmarks/ or behind "
+        "an injected clock",
+        path_filters=("src/repro/core/", "src/repro/serve/",
+                      "src/repro/runtime/", "src/repro/sharding/")),
+    Rule(
+        "EX301", "exception-swallowed",
+        "broad `except Exception`/bare `except` that neither re-raises "
+        "nor chains hides preemptions and real bugs; catch the specific "
+        "exception types the path can produce, or re-raise with "
+        "context"),
+    Rule(
+        "PY401", "mutable-default-argument",
+        "mutable default argument is shared across calls; default to "
+        "None and construct inside the function"),
+)}

@@ -28,7 +28,8 @@ from typing import Iterable, Protocol, runtime_checkable
 
 from .core.archspec import ArchSpec
 from .core.problem import Workload
-from .core.search import SearchConfig, SearchResult
+# SearchResult is re-exported: it is the concrete ResultLike users get.
+from .core.search import SearchConfig, SearchResult  # noqa: F401
 
 
 @runtime_checkable
@@ -128,8 +129,8 @@ class SearchOutcome:
 
 
 def _workload_repr(w: Workload) -> list:
-    return [w.name] + [[l.name, list(l.dims), l.wstride, l.hstride,
-                        l.repeat] for l in w.layers]
+    return [w.name] + [[lay.name, list(lay.dims), lay.wstride,
+                        lay.hstride, lay.repeat] for lay in w.layers]
 
 
 def _config_repr(cfg: SearchConfig) -> dict:

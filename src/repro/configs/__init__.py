@@ -4,7 +4,9 @@ from __future__ import annotations
 
 import importlib
 
-from .base import SHAPES, ArchConfig, ShapeConfig, shape_applicable
+# Package surface: re-exported for `from repro.configs import ...`.
+from .base import (SHAPES, ArchConfig, ShapeConfig,  # noqa: F401
+                   shape_applicable)
 
 ARCH_IDS = (
     "phi3_5_moe_42b",

@@ -8,7 +8,6 @@ used by CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
 

@@ -46,7 +46,7 @@ B_GEMMINI[DRAM, :] = True
 # Energy per access constants (Table 2).
 EPA_MAC = 0.561
 EPA_REG = 0.487
-EPA_ACC_BASE, EPA_ACC_SLOPE = 1.94, 0.1005     # + slope * C_acc_KB / sqrt(C_PE)
+EPA_ACC_BASE, EPA_ACC_SLOPE = 1.94, 0.1005  # + slope * C_acc_KB / sqrt(C_PE)
 EPA_SP_BASE, EPA_SP_SLOPE = 0.49, 0.025        # + slope * C_sp_KB
 EPA_DRAM = 100.0
 

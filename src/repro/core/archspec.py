@@ -226,7 +226,7 @@ class CompiledSpec:
         self.spec = spec
         self.n_levels = nl
         self.backing = nl - 1
-        self.level_names = tuple(l.name for l in spec.levels)
+        self.level_names = tuple(lvl.name for lvl in spec.levels)
 
         # --- tensor-binding matrix B (Table 4) and per-tensor chains.
         b = np.zeros((nl, NTENSORS), dtype=bool)
@@ -246,14 +246,14 @@ class CompiledSpec:
 
         # --- per-level constants.
         self.word_bytes = _readonly(
-            np.array([l.word_bytes for l in spec.levels]))
-        self.searched_levels = tuple(i for i, l in enumerate(spec.levels)
-                                     if l.searched)
+            np.array([lvl.word_bytes for lvl in spec.levels]))
+        self.searched_levels = tuple(
+            i for i, lvl in enumerate(spec.levels) if lvl.searched)
         # (level, capacity_words) pairs whose capacity is a hard
         # constraint even in mapping-first mode (fixed silicon).
-        self.fixed_capacity = tuple((i, float(l.size_words))
-                                    for i, l in enumerate(spec.levels)
-                                    if l.size_words is not None)
+        self.fixed_capacity = tuple((i, float(lvl.size_words))
+                                    for i, lvl in enumerate(spec.levels)
+                                    if lvl.size_words is not None)
 
         # --- dataflow structure.
         for (lvl, d) in spec.spatial_sites:
@@ -461,7 +461,7 @@ def engine_group_key(spec) -> tuple:
     cspec = resolve_spec(spec)
     s = cspec.spec
     return (cspec.n_levels,
-            tuple(tuple(sorted(l.tensors)) for l in s.levels),
+            tuple(tuple(sorted(lvl.tensors)) for lvl in s.levels),
             tuple(cspec.spatial_sites),
             tuple(sorted(s.level0_temporal_dims)))
 
@@ -509,15 +509,15 @@ def bucket_workload(workload):
     from .problem import Layer, Workload
     layers = []
     sig = []
-    for i, l in enumerate(workload.layers):
-        dims = tuple(bucket_dim(d) for d in l.dims)
+    for i, lay in enumerate(workload.layers):
+        dims = tuple(bucket_dim(d) for d in lay.dims)
         # Layer names participate in Workload equality (and therefore in
         # engine-cache keys), so they are canonicalized too.
-        layers.append(Layer(dims=dims, wstride=l.wstride,
-                            hstride=l.hstride, repeat=l.repeat,
+        layers.append(Layer(dims=dims, wstride=lay.wstride,
+                            hstride=lay.hstride, repeat=lay.repeat,
                             name=f"l{i}"))
         sig.append("x".join(str(d) for d in dims)
-                   + f"s{l.wstride}.{l.hstride}r{l.repeat}")
+                   + f"s{lay.wstride}.{lay.hstride}r{lay.repeat}")
     return Workload(layers=tuple(layers), name="bkt_" + "_".join(sig))
 
 
@@ -529,15 +529,19 @@ def engine_bucket_key(spec, workload) -> tuple:
     structure AND same baked workload constants after bucketing."""
     canon = bucket_workload(workload)
     return (engine_group_key(spec),
-            tuple((l.dims, l.wstride, l.hstride, l.repeat)
-                  for l in canon.layers))
+            tuple((lay.dims, lay.wstride, lay.hstride, lay.repeat)
+                  for lay in canon.layers))
 
 
 @functools.lru_cache(maxsize=None)
 def compile_spec(spec: ArchSpec) -> CompiledSpec:
     """Lower an `ArchSpec` to its static model tables.  Cached: the same
     spec always returns the same `CompiledSpec` instance, so closures
-    and jit caches keyed on it are shared."""
+    and jit caches keyed on it are shared.  Every cache miss runs the
+    full spec lint (`repro.analysis.speclint`) first, so a malformed
+    spec fails with rule IDs before any table is built."""
+    from repro.analysis.speclint import check_spec  # lazy: avoids cycle
+    check_spec(spec)
     return CompiledSpec(spec)
 
 

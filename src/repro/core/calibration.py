@@ -191,7 +191,8 @@ def calibrate_epa(spec: ArchSpec, samples=None) -> ArchSpec:
     unknown = set(samples) - {lvl.name for lvl in spec.levels}
     if unknown:
         raise ValueError(f"no levels named {sorted(unknown)} in "
-                         f"{spec.name} (has {[l.name for l in spec.levels]})")
+                         f"{spec.name} "
+                         f"(has {[lvl.name for lvl in spec.levels]})")
     levels = []
     for lvl in spec.levels:
         if lvl.name in samples:

@@ -111,8 +111,8 @@ def cosa_map(layer: Layer, hw, optimize_order: bool = False,
 
 def cosa_map_workload(layers, hw, optimize_order: bool = False,
                       spec=None) -> list[Mapping]:
-    return [cosa_map(l, hw, optimize_order=optimize_order, spec=spec)
-            for l in layers]
+    return [cosa_map(lay, hw, optimize_order=optimize_order, spec=spec)
+            for lay in layers]
 
 
 def cosa_seed_population(dims, n: int, key, *, spec=None, pe_cap=None):

@@ -111,11 +111,13 @@ def spec_params(spec) -> SpecParams:
     for i in cspec.searched_levels:
         searched[i] = 1.0
     return SpecParams(
-        epa_base=np.array([l.epa.base for l in s.levels]),
-        epa_slope=np.array([l.epa.slope for l in s.levels]),
-        epa_pe_scaled=np.array([float(l.epa.pe_scaled) for l in s.levels]),
-        bw_coeff=np.array([l.bandwidth.coeff for l in s.levels]),
-        bw_kind=np.array([_BW_KIND[l.bandwidth.kind] for l in s.levels]),
+        epa_base=np.array([lvl.epa.base for lvl in s.levels]),
+        epa_slope=np.array([lvl.epa.slope for lvl in s.levels]),
+        epa_pe_scaled=np.array(
+            [float(lvl.epa.pe_scaled) for lvl in s.levels]),
+        bw_coeff=np.array([lvl.bandwidth.coeff for lvl in s.levels]),
+        bw_kind=np.array(
+            [_BW_KIND[lvl.bandwidth.kind] for lvl in s.levels]),
         word_bytes=np.asarray(cspec.word_bytes, dtype=float),
         cap_fixed=cap_fixed,
         searched=searched,
@@ -186,9 +188,9 @@ def member_edp(group: CompiledSpec, sp: SpecParams, f_all, orders, strides,
     own spec parameters, hardware inferred mapping-first."""
     b_mat = jnp.asarray(group.b_matrix, dtype=jnp.float32)
     hw = _infer_hw_param(group, sp, f_all, strides, b_mat)
-    e, l = jax.vmap(lambda f, o, s: _layer_el_param(
+    e, lat = jax.vmap(lambda f, o, s: _layer_el_param(
         group, sp, f, o, s, hw.c_pe, hw.cap_words))(f_all, orders, strides)
-    return jnp.sum(e * repeats) * jnp.sum(l * repeats)
+    return jnp.sum(e * repeats) * jnp.sum(lat * repeats)
 
 
 # ---------------------------------------------------------------------------
@@ -333,10 +335,10 @@ def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
                                                    cspec.pe_cap)
                 if reselect:
                     hws = infer_hw_population_spec(cspec, f_r, strides)
-                    e, l = layer_el_all_orderings_population_spec(
+                    e, lat = layer_el_all_orderings_population_spec(
                         cspec, f_r, strides, hws)
                     rep = repeats[None, :, None]
-                    choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
+                    choice = jax.vmap(_cd_orderings)(e * rep, lat * rep)
                     o_r = combos[choice]
                 else:
                     o_r = orders[a:b]

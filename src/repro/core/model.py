@@ -59,7 +59,7 @@ import numpy as np
 
 from .arch import ACC, NLEVELS, SP
 from .archspec import (CompiledSpec, GEMMINI_SPEC, compile_spec,
-                       ordering_combos_for, resolve_spec)
+                       ordering_combos_for)
 from .mapping import ORDER_TABLE, SPATIAL, TEMPORAL
 from .problem import C, K, N, P, Q, R, S, REL, I_T, O_T, W_T
 
@@ -444,8 +444,10 @@ def population_best_update(best: PopulationBest, edp: jnp.ndarray,
     fused engine folds this over its rounding points so the running
     best lives on device for the whole search."""
     take = edp < best.edp                                  # (P,)
-    sel = lambda new, old, t: jnp.where(
-        t.reshape(t.shape + (1,) * (new.ndim - 1)), new, old)
+
+    def sel(new, old, t):
+        return jnp.where(
+            t.reshape(t.shape + (1,) * (new.ndim - 1)), new, old)
     return PopulationBest(edp=jnp.where(take, edp, best.edp),
                           f=sel(f, best.f, take),
                           orders=sel(orders, best.orders, take))
@@ -517,9 +519,10 @@ def layer_el_all_orderings_population_spec(cspec: CompiledSpec,
     all ordering combos, as one batched computation.  fs_pop:
     (P, L, 2, n_levels, 7); hws: SpecHW with (P,)/(P, n_levels) leaves.
     Returns (energies, latencies), each (P, L, n_combos)."""
-    per_member = lambda fs, s, c, w: jax.vmap(
-        lambda f, st_: layer_el_all_orderings_spec(cspec, f, st_, c, w))(
-        fs, s)
+    def per_member(fs, s, c, w):
+        return jax.vmap(
+            lambda f, st_: layer_el_all_orderings_spec(
+                cspec, f, st_, c, w))(fs, s)
     return jax.vmap(per_member, in_axes=(0, None, 0, 0))(
         fs_pop, strides, hws.c_pe, hws.cap_words)
 
@@ -528,7 +531,8 @@ def layer_el_all_orderings_population(fs_pop: jnp.ndarray,
                                       strides: jnp.ndarray, hws: HWParams):
     """Legacy Gemmini entry point.  hws: HWParams with (P,) leaves.
     Returns (energies, latencies), each (P, L, 27)."""
-    per_member = lambda fs, s, c, a, w: jax.vmap(
-        lambda f, st_: layer_el_all_orderings(f, st_, c, a, w))(fs, s)
+    def per_member(fs, s, c, a, w):
+        return jax.vmap(
+            lambda f, st_: layer_el_all_orderings(f, st_, c, a, w))(fs, s)
     return jax.vmap(per_member, in_axes=(0, None, 0, 0, 0))(
         fs_pop, strides, hws.c_pe, hws.acc_words, hws.sp_words)

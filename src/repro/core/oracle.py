@@ -32,7 +32,7 @@ import math
 
 import numpy as np
 
-from .archspec import CompiledSpec, resolve_spec
+from .archspec import resolve_spec
 from .mapping import ORDER_TABLE, SPATIAL, TEMPORAL, Mapping
 from .problem import (C, K, N, NDIMS, P, Q, R, S, REL, I_T, O_T, W_T, Layer)
 
@@ -70,8 +70,10 @@ def _caps(m: Mapping, layer: Layer) -> np.ndarray:
         w = 1
         for d in (R, S, C, K):
             w *= _tile_extent(m, i, d)
-        pin = layer.wstride * (_tile_extent(m, i, P) - 1) + _tile_extent(m, i, R)
-        qin = layer.hstride * (_tile_extent(m, i, Q) - 1) + _tile_extent(m, i, S)
+        pin = layer.wstride * (_tile_extent(m, i, P) - 1) \
+            + _tile_extent(m, i, R)
+        qin = layer.hstride * (_tile_extent(m, i, Q) - 1) \
+            + _tile_extent(m, i, S)
         inp = _tile_extent(m, i, C) * _tile_extent(m, i, N) * pin * qin
         o = 1
         for d in (P, Q, K, N):

@@ -111,19 +111,21 @@ class Workload:
 
     @property
     def total_macs(self) -> int:
-        return sum(l.macs * l.repeat for l in self.layers)
+        return sum(lay.macs * lay.repeat for lay in self.layers)
 
     def dims_array(self) -> np.ndarray:
         """(L, 7) int array of problem dims."""
-        return np.array([l.dims for l in self.layers], dtype=np.int64)
+        return np.array([lay.dims for lay in self.layers], dtype=np.int64)
 
     def strides_array(self) -> np.ndarray:
         """(L, 2) [wstride, hstride]."""
-        return np.array([[l.wstride, l.hstride] for l in self.layers],
+        return np.array([[lay.wstride, lay.hstride]
+                         for lay in self.layers],
                         dtype=np.int64)
 
     def repeats_array(self) -> np.ndarray:
-        return np.array([l.repeat for l in self.layers], dtype=np.int64)
+        return np.array([lay.repeat for lay in self.layers],
+                        dtype=np.int64)
 
 
 def divisors(n: int) -> list[int]:
@@ -141,13 +143,14 @@ def dedupe_layers(layers: Sequence[Layer]) -> Workload:
     """Collapse identical (dims, strides) layers into repeats."""
     seen: dict[tuple, int] = {}
     order: list[Layer] = []
-    for l in layers:
-        key = (l.dims, l.wstride, l.hstride)
+    for lay in layers:
+        key = (lay.dims, lay.wstride, lay.hstride)
         if key in seen:
             idx = seen[key]
             old = order[idx]
-            order[idx] = dataclasses.replace(old, repeat=old.repeat + l.repeat)
+            order[idx] = dataclasses.replace(
+                old, repeat=old.repeat + lay.repeat)
         else:
             seen[key] = len(order)
-            order.append(l)
+            order.append(lay)
     return Workload(layers=tuple(order))

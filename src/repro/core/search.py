@@ -310,12 +310,12 @@ def _make_loss_fn(workload: Workload, cfg: SearchConfig):
     def edp_softmax(f, orders):
         hw = infer_hw_spec(cspec, f, strides) if hw_fixed is None \
             else hw_fixed
-        e, l = jax.vmap(lambda fl, s: layer_el_all_orderings_spec(
+        e, lat = jax.vmap(lambda fl, s: layer_el_all_orderings_spec(
             cspec, fl, s, hw.c_pe, hw.cap_words))(f, strides)
-        inv = jnp.min(e * l, axis=1, keepdims=True) / (e * l)   # (L,n_c)
+        inv = jnp.min(e * lat, axis=1, keepdims=True) / (e * lat)
         w = jax.nn.softmax(cfg.softmax_temp * inv, axis=1)       # Eq. 16
         e_l = jnp.sum(w * e, axis=1) * repeats
-        l_l = jnp.sum(w * l, axis=1) * repeats
+        l_l = jnp.sum(w * lat, axis=1) * repeats
         return jnp.sum(e_l) * jnp.sum(l_l), hw                   # Eq. 17
 
     def _fixed_silicon_penalty(f):
@@ -393,7 +393,7 @@ def make_loss(workload: Workload, cfg: SearchConfig):
 # Adam (pure JAX)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("lr",))
+@partial(jax.jit, static_argnames=("lr",), donate_argnums=(0, 2, 3))
 def adam_step(theta, grad, m, v, t, lr: float, b1=_ADAM_B1, b2=_ADAM_B2,
               eps=_ADAM_EPS):
     m = b1 * m + (1 - b1) * grad
@@ -553,10 +553,10 @@ def make_fused_runner(workload: Workload, cfg: SearchConfig):
                             x, theta.shape[:1] + jnp.shape(x)), hw_fixed)
                 else:
                     hws = infer_hw_population_spec(cspec, f_round, strides)
-                e, l = layer_el_all_orderings_population_spec(
+                e, lat = layer_el_all_orderings_population_spec(
                     cspec, f_round, strides, hws)
                 rep = repeats[None, :, None]
-                choice = jax.vmap(_cd_orderings)(e * rep, l * rep)
+                choice = jax.vmap(_cd_orderings)(e * rep, lat * rep)
                 orders = combos[choice]                # (P, L, n_levels)
             edp = population_edp_spec(cspec, f_round, orders, strides,
                                       repeats, hw=hw_fixed)
@@ -616,12 +616,12 @@ def make_fused_runner(workload: Workload, cfg: SearchConfig):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("n_passes",))
-def _cd_orderings(e: jnp.ndarray, l: jnp.ndarray,
+def _cd_orderings(e: jnp.ndarray, lat: jnp.ndarray,
                   n_passes: int = 2) -> jnp.ndarray:
     """Coordinate descent over per-layer ordering choices as a pure
     jittable program — ONE implementation (and therefore one float /
     tie-breaking semantics) shared by the host helpers and the fused
-    device-resident engines.  e, l: (L, n_combos) repeat-scaled
+    device-resident engines.  e, lat: (L, n_combos) repeat-scaled
     energies/latencies.  Returns (L,) int32 combo indices minimizing
     (sum e) * (sum l); each pass re-derives the totals then sweeps the
     layers in order, exactly the original host algorithm."""
@@ -629,7 +629,8 @@ def _cd_orderings(e: jnp.ndarray, l: jnp.ndarray,
 
     def one_pass(choice, _):
         e_tot = jnp.sum(jnp.take_along_axis(e, choice[:, None], axis=1))
-        l_tot = jnp.sum(jnp.take_along_axis(l, choice[:, None], axis=1))
+        l_tot = jnp.sum(jnp.take_along_axis(lat, choice[:, None],
+                                            axis=1))
 
         def layer_step(carry, xs):
             choice, e_tot, l_tot = carry
@@ -642,7 +643,7 @@ def _cd_orderings(e: jnp.ndarray, l: jnp.ndarray,
             return (choice, e_rest + ei[c], l_rest + li[c]), ()
 
         (choice, _, _), _ = jax.lax.scan(
-            layer_step, (choice, e_tot, l_tot), (jnp.arange(L), e, l))
+            layer_step, (choice, e_tot, l_tot), (jnp.arange(L), e, lat))
         return choice, ()
 
     choice0 = jnp.zeros(L, dtype=jnp.int32)
@@ -654,11 +655,11 @@ def select_orderings_spec(cspec: CompiledSpec, fs: np.ndarray,
                           strides: np.ndarray, repeats: np.ndarray,
                           hw: SpecHW, n_passes: int = 2) -> np.ndarray:
     combos = cspec.combos                            # (n_combos, n_levels)
-    e, l = jax.vmap(lambda f, s: layer_el_all_orderings_spec(
+    e, lat = jax.vmap(lambda f, s: layer_el_all_orderings_spec(
         cspec, f, s, hw.c_pe, hw.cap_words))(
         jnp.asarray(fs), jnp.asarray(strides))
     rep = jnp.asarray(repeats, dtype=e.dtype)[:, None]
-    choice = _cd_orderings(e * rep, l * rep, n_passes=n_passes)
+    choice = _cd_orderings(e * rep, lat * rep, n_passes=n_passes)
     return combos[np.asarray(choice)]                # (L, n_levels)
 
 
@@ -680,12 +681,12 @@ def select_orderings_population_spec(cspec: CompiledSpec,
     n_levels) leaves (one inferred/fixed hardware per member).  Returns
     (P, L, n_levels)."""
     combos = cspec.combos
-    e, l = layer_el_all_orderings_population_spec(
+    e, lat = layer_el_all_orderings_population_spec(
         cspec, jnp.asarray(fs_pop), jnp.asarray(strides), hws)
     rep = jnp.asarray(repeats, dtype=e.dtype)[None, :, None]
     choice = jax.vmap(
         lambda ep, lp: _cd_orderings(ep, lp, n_passes=n_passes))(
-        e * rep, l * rep)
+        e * rep, lat * rep)
     return combos[np.asarray(choice)]                # (P, L, n_levels)
 
 

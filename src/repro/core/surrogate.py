@@ -16,7 +16,6 @@ of random mappings (the paper uses 1567 FireSim measurements).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

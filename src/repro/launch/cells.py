@@ -17,20 +17,17 @@ device-count manipulation — `dryrun.py` owns XLA_FLAGS.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..configs import get_config
 from ..configs.base import SHAPES, ArchConfig, ShapeConfig, \
     shape_applicable
-from ..models.lm import LM, build_model
+from ..models.lm import build_model
 from ..train.optimizer import OptConfig
 from ..train.train_step import (TrainConfig, make_train_step,
                                 opt_state_specs)
@@ -156,7 +153,9 @@ def _mem_analysis(compiled):
             "argument_size_in_bytes", "output_size_in_bytes",
             "temp_size_in_bytes", "generated_code_size_in_bytes")
             if hasattr(ma, k)}
-    except Exception:
+    # memory_analysis is backend-dependent: absent attribute surfaces
+    # as AttributeError, unsupported backends raise these two.
+    except (AttributeError, NotImplementedError, RuntimeError):
         return None
 
 
@@ -220,7 +219,9 @@ def _analyze(compiled):
     nbytes = float(cost.get("bytes accessed", 0.0))
     try:
         hlo = compiled.as_text()
-    except Exception:
+    # as_text is best-effort on some backends (the collective census
+    # then degrades to zero, which run_cell reports as-is).
+    except (NotImplementedError, RuntimeError, UnicodeDecodeError):
         hlo = ""
     coll = parse_collective_bytes(hlo)
     return flops, nbytes, coll

@@ -20,11 +20,11 @@ Usage:
 returned to the OS between cells); results are merged into
 <out>/dryrun_<mesh>.json either way.
 """
-import argparse
-import json
-import pathlib
-import subprocess
-import sys
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
 
 
 def _merge(out_dir: pathlib.Path, mesh_name: str, record: dict):
@@ -90,8 +90,13 @@ def main() -> None:
                             ok = run_one(arch, shape, mp, out_dir)
                             if not ok:
                                 failures.append((arch, shape, mp))
-                        except Exception as e:  # noqa: BLE001
-                            print(f"[dryrun] {arch} {shape} EXC: {e}")
+                        # lowering/compile failures (XLA raises them
+                        # as RuntimeError/ValueError/TypeError) are
+                        # recorded per cell so the sweep continues;
+                        # the driver exits non-zero at the end.
+                        except (RuntimeError, ValueError,
+                                TypeError, KeyError) as e:
+                            print(f"[dryrun] {arch} {shape} EXC: {e!r}")
                             failures.append((arch, shape, mp))
         if failures:
             sys.exit(f"dry-run failures: {failures}")

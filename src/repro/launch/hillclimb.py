@@ -16,9 +16,9 @@ artifacts/perf/<arch>_<shape>.json.
 Variants (each encodes one napkin-math hypothesis; see EXPERIMENTS.md
 Sec. Perf for the analysis):
 """
-import argparse
-import json
-import pathlib
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
 
 VARIANTS: dict[str, dict] = {
     "baseline": {},

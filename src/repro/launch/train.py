@@ -12,7 +12,6 @@ straggler logging) comes from repro.runtime.fault_tolerance.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 

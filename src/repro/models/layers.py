@@ -7,9 +7,6 @@ production configs); parameters live in `param_dtype`.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -93,7 +90,7 @@ def flash_attention(q, k, v, *, causal: bool, chunk: int = 1024,
     q_pos = q_offset + jnp.arange(sq)
 
     def step(carry, inputs):
-        acc, m, l = carry
+        acc, m, lse = carry
         kb, vb, c_idx = inputs
         s = jnp.einsum("bhgqd,bhcd->bhgqc", qg, kb,
                        preferred_element_type=jnp.float32) * scale
@@ -107,19 +104,19 @@ def flash_attention(q, k, v, *, causal: bool, chunk: int = 1024,
         p = jnp.exp(s - m_safe[..., None])
         p = jnp.where(jnp.isfinite(s), p, 0.0)
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-        l_new = l * alpha + p.sum(axis=-1)
+        lse_new = lse * alpha + p.sum(axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bhgqc,bhcd->bhgqd", p, vb.astype(jnp.float32))
-        return (acc_new, m_safe, l_new), None
+        return (acc_new, m_safe, lse_new), None
 
     acc0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
     m0 = jnp.full((b, hkv, group, sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(
+    (acc, m, lse), _ = jax.lax.scan(
         step, (acc0, m0, l0),
         (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
          jnp.arange(n_chunks)), unroll=unroll)
-    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = acc / jnp.maximum(lse[..., None], 1e-20)
     return out.reshape(b, hq, sq, d).astype(q.dtype)
 
 
@@ -282,7 +279,7 @@ def mlp_apply(params, cfg: ArchConfig, x):
 def embedding_init(key, cfg: ArchConfig):
     from jax.sharding import PartitionSpec as P
 
-    from ..sharding.rules import DATA_AXIS_SIZE, MODEL_AXIS_SIZE
+    from ..sharding.rules import MODEL_AXIS_SIZE
     pdt = dtype_of(cfg.param_dtype)
     k1, k2 = jax.random.split(key)
     params = {

@@ -15,16 +15,12 @@ Three entry points per model:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..sharding.rules import ACT_TOKENS, constrain, spec
+from ..sharding.rules import ACT_TOKENS, constrain
 from . import layers as L
 from . import moe as M
 from . import ssm as S
@@ -87,7 +83,6 @@ def _slot_apply(p, cfg: ArchConfig, slot: SlotSpec, x, positions,
     kv = None
     h = L.rmsnorm(p["ln1"], x)
     if slot.kind == "attn":
-        b = x.shape[0]
         q, k, v = L.attention_qkv(p["attn"], cfg, h, h, positions,
                                   positions)
         out = L.flash_attention(q, k, v, causal=causal,
@@ -248,7 +243,7 @@ class LM:
         cache = {"kv": kv_stacks, "ssm": None}
         return logits, cache
 
-    # ---- serve cache ---------------------------------------------------------
+    # ---- serve cache --------------------------------------------------------
     def init_cache(self, batch_size: int, max_seq: int,
                    dtype=jnp.bfloat16):
         """Zeroed decode cache: per attention slot a stacked
@@ -290,7 +285,7 @@ class LM:
                     "h": P(None, bspec, "model", None, None)}
         return specs
 
-    # ---- decode step ---------------------------------------------------------
+    # ---- decode step --------------------------------------------------------
     def decode_step(self, params, cache, tokens, position,
                     image_embeds=None):
         """tokens: (B, 1) int32; position: int32 scalar.  Returns

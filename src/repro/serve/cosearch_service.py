@@ -70,11 +70,19 @@ from ..launch.mesh import auto_pop_shards
 from ..core.fleet import fleet_engine_cache_stats
 from ..runtime import search_checkpoint as sckpt
 
+# The fault classes a segment retry can recover from: device/runtime
+# faults (preemption, OOM — jax surfaces them as RuntimeError
+# subclasses), checkpoint I/O failures, and bad numeric state.
+# Anything else (KeyboardInterrupt, programming errors like
+# AttributeError) propagates immediately instead of burning retries.
+_RETRYABLE_FAULTS = (RuntimeError, OSError, ValueError, FloatingPointError)
+
 
 @dataclasses.dataclass
 class ServiceConfig:
     """Serving policy knobs."""
-    bucket_workloads: bool = True   # canonicalize query shapes (see module doc)
+    # canonicalize query shapes (see module doc)
+    bucket_workloads: bool = True
     batch_max: int = 8              # max requests fused into one batch task
     member_buckets: tuple = (1, 2, 4, 8, 16)  # canonical population sizes
     checkpoint_dir: str | None = None         # None: no persistence
@@ -245,7 +253,7 @@ class _BatchTask:
             try:
                 self._advance_once(fault_hook)
                 break
-            except Exception:
+            except _RETRYABLE_FAULTS:
                 self.restarts += 1
                 if self.restarts > self.svc_cfg.max_restarts:
                     raise
@@ -462,12 +470,13 @@ class CoSearchService:
         """Non-dominated (request_id, energy, latency) points over every
         request's current best — the service-wide frontier whose deltas
         the event stream carries (`best_point` updates)."""
-        pts = [(rid, e, l) for rid, (e, l) in self._frontier.items()]
+        pts = [(rid, e, lat)
+               for rid, (e, lat) in self._frontier.items()]
         front = []
-        for rid, e, l in pts:
-            if not any((e2 <= e and l2 <= l and (e2 < e or l2 < l))
+        for rid, e, lat in pts:
+            if not any((e2 <= e and l2 <= lat and (e2 < e or l2 < lat))
                        for _, e2, l2 in pts):
-                front.append((rid, e, l))
+                front.append((rid, e, lat))
         return sorted(front, key=lambda t: t[1])
 
     def stats(self) -> dict:

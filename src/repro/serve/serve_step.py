@@ -7,7 +7,6 @@ parallelism) and batch-sharded over ("pod", "data") — see
 decode_32k / long_500k shapes."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

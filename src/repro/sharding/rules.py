@@ -163,5 +163,9 @@ def constrain(x, pspec: P):
             return x
         clean = sanitize_spec(pspec, set(mesh.axis_names))
         return jax.lax.with_sharding_constraint(x, clean)
-    except Exception:
+    # no-op fallbacks only for the expected shapes of "no usable mesh
+    # here": older jax without get_abstract_mesh (AttributeError), or
+    # a constraint rejected outside a mesh context (Type/Value/
+    # RuntimeError).  Anything else is a real bug and propagates.
+    except (AttributeError, TypeError, ValueError, RuntimeError):
         return x

@@ -7,7 +7,6 @@ parameter across "data" x "model")."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,8 @@ def schedule(cfg: OptConfig, step):
 
 def adam_init(cfg: OptConfig, params):
     mdt = _mdt(cfg)
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

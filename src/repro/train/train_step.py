@@ -8,13 +8,11 @@ by SPMD from the shardings (no explicit psum)."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ArchConfig
 from ..models.lm import LM
 from .optimizer import (OptConfig, clip_by_global_norm, make_optimizer)
 

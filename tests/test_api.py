@@ -6,14 +6,13 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.api import (ResultLike, SearchOutcome, SearchRequest,
-                       run_request)
+from repro.api import ResultLike, SearchRequest, run_request
 from repro.core import fleet, search
 from repro.core.archspec import EDGE_SPEC, TPU_V5E_SPEC
 from repro.core.fleet import FleetResult, fleet_search
 from repro.core.lru import LRUCache
 from repro.core.problem import Layer, Workload
-from repro.core.search import SearchConfig, SearchResult, dosa_search
+from repro.core.search import SearchConfig, dosa_search
 
 # Pre-façade golden values for the g2 workload, captured from the
 # legacy drivers before dosa_search/fleet_search became api wrappers.

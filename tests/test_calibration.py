@@ -85,8 +85,8 @@ def test_traced_features_match_host_featurizer(spec, small_workload):
     cspec = resolve_spec(spec)
     layers = list(small_workload.layers)
     rng = np.random.default_rng(11)
-    mappings = [random_mapping(np.asarray(l.dims), rng, spec=spec)
-                for l in layers]
+    mappings = [random_mapping(np.asarray(lay.dims), rng, spec=spec)
+                for lay in layers]
     hw = cal.default_hw_for(spec)
     c_pe, cap_words = cspec.hw_words(hw)
     shw = SpecHW(c_pe=jnp.asarray(c_pe), cap_words=jnp.asarray(cap_words))
@@ -98,8 +98,8 @@ def test_traced_features_match_host_featurizer(spec, small_workload):
     traced = np.asarray(cal.traced_features(cspec, theta,
                                             jnp.asarray(orders),
                                             logdims, shw))
-    host = np.stack([cal.featurize_spec(m, l, hw, spec=spec)
-                     for m, l in zip(mappings, layers)])
+    host = np.stack([cal.featurize_spec(m, lay, hw, spec=spec)
+                     for m, lay in zip(mappings, layers)])
     np.testing.assert_allclose(traced, host, rtol=1e-5, atol=1e-5)
 
 
@@ -171,7 +171,7 @@ def test_calibrate_epa_fits_measurement_better_than_table(base):
         assert mse_fit < mse_tab
     # Every capacity-dependent level was fitted (TPU v5e has none: all
     # its EPA models are constants, so calibration leaves it unchanged).
-    assert n_fitted == sum(l.epa.slope != 0.0 for l in base.levels)
+    assert n_fitted == sum(lvl.epa.slope != 0.0 for lvl in base.levels)
     # The calibrated spec compiles and evaluates like any other.
     cspec = compile_spec(spec)
     assert cspec.n_levels == resolve_spec(base).n_levels

@@ -3,16 +3,14 @@ independent iterative oracle (the paper's Fig. 4 agreement, as a test
 suite)."""
 import hypothesis
 import hypothesis.strategies as st
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import model, oracle
-from repro.core.arch import ACC, DRAM, REG, SP, GemminiHW
+from repro.core.arch import ACC, DRAM, REG, SP
 from repro.core.mapping import (SPATIAL, TEMPORAL, Mapping, random_mapping)
-from repro.core.problem import (C, K, N, P, Q, R, S, Layer, Workload,
-                                divisors)
+from repro.core.problem import C, K, P, Q, Layer
 
 # ---------------------------------------------------------------------------
 # The paper's Fig. 3 worked example — exact numbers from the figure.
@@ -31,7 +29,8 @@ def _fig3():
 
 def test_fig3_capacities_match_paper():
     layer, m = _fig3()
-    caps = np.asarray(model.capacities(jnp.asarray(m.f), jnp.asarray([1., 1.])))
+    caps = np.asarray(model.capacities(jnp.asarray(m.f),
+                                       jnp.asarray([1., 1.])))
     # Fig. 3: Registers (Weights: 4096); Accumulator (Outputs: 896);
     # Scratchpad (Weights: 4096, Inputs: 896);
     # DRAM (Weights: 4096, Inputs: 200704, Outputs: 200704).
@@ -134,7 +133,7 @@ def test_capacity_monotone_in_levels(lm_pair):
 
 def test_gradients_flow_and_finite(tiny_workload):
     """EDP is differentiable w.r.t. factors: finite, mostly nonzero."""
-    from repro.core.search import build_f, make_loss, SearchConfig, \
+    from repro.core.search import make_loss, SearchConfig, \
         theta_from_mappings
     from repro.core.cosa import cosa_map_workload
     from repro.core.arch import GEMMINI_DEFAULT

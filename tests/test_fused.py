@@ -19,6 +19,7 @@ from repro.core.fleet import fleet_search
 from repro.core.mapping import stack_mappings
 from repro.core.problem import Layer, Workload, divisors
 from repro.core.rounding import round_population, round_population_device
+from repro.analysis import contracts
 from repro.core.search import (SearchConfig, dosa_search, make_fused_runner)
 
 ALL_SPECS = (GEMMINI_SPEC, TPU_V5E_SPEC, EDGE_SPEC)
@@ -160,9 +161,12 @@ def test_fused_is_single_compiled_program(two_layer_workload):
     cfg = SearchConfig(steps=50, round_every=20, n_start_points=2, seed=7)
     dosa_search(two_layer_workload, cfg, population=2, fused=True)
     run_fused, *_ = make_fused_runner(two_layer_workload, cfg)
-    assert run_fused._cache_size() == 1
-    dosa_search(two_layer_workload, cfg, population=2, fused=True)
-    assert run_fused._cache_size() == 1
+    contracts.assert_no_recompile(run_fused)
+    # a repeat search stays warm (still exactly one compiled program)
+    contracts.assert_no_recompile(
+        run_fused,
+        calls=[lambda: dosa_search(two_layer_workload, cfg,
+                                   population=2, fused=True)])
 
 
 def test_ragged_final_chunk_does_not_recompile(two_layer_workload):
@@ -177,7 +181,7 @@ def test_ragged_final_chunk_does_not_recompile(two_layer_workload):
     assert fus.best_edp == host.best_edp
     assert fus.n_evals == host.n_evals
     run_fused, *_ = make_fused_runner(two_layer_workload, cfg)
-    assert run_fused._cache_size() == 1
+    contracts.assert_no_recompile(run_fused)
 
 
 def test_fused_fixed_hw_mode(two_layer_workload):

@@ -4,7 +4,6 @@ differences wherever the model is smooth (it is piecewise-smooth by
 construction: the fill-reuse mask flips at factor==1 and the validity
 penalty kinks at f==1 — Sec. 4/5.3.3; kink points are detected via
 disagreeing one-sided differences and excluded)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

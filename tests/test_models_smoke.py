@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.data.pipeline import DataConfig, make_batch
 from repro.models.lm import build_model
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import TrainConfig, make_train_step

@@ -5,12 +5,12 @@ import hypothesis.strategies as st
 import numpy as np
 import pytest
 
-from repro.core.arch import GEMMINI_DEFAULT, MAX_PE_DIM, GemminiHW
+from repro.core.arch import GEMMINI_DEFAULT, MAX_PE_DIM
 from repro.core.cosa import cosa_map, cosa_map_workload
-from repro.core.hw_infer import minimal_hw, random_hw
-from repro.core.mapping import SPATIAL, TEMPORAL, random_mapping
+from repro.core.hw_infer import minimal_hw
+from repro.core.mapping import SPATIAL
 from repro.core.oracle import evaluate, evaluate_workload
-from repro.core.problem import Layer, Workload, divisors
+from repro.core.problem import Layer, Workload
 from repro.core.rounding import round_mapping
 from repro.core.search import SearchConfig, dosa_search
 
@@ -124,5 +124,6 @@ def test_start_point_rejection():
     res = dosa_search(wl, cfg)
     running_best = np.inf
     for e in res.start_edps:
-        assert e <= cfg.reject_factor * running_best or not np.isfinite(running_best)
+        assert (e <= cfg.reject_factor * running_best
+                or not np.isfinite(running_best))
         running_best = min(running_best, e)

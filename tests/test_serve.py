@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.analysis import contracts
 from repro.api import SearchRequest
 from repro.core import search as search_mod
 from repro.core.archspec import (EDGE_SPEC, TPU_V5E_SPEC, bucket_dim,
@@ -14,7 +15,7 @@ from repro.core.archspec import (EDGE_SPEC, TPU_V5E_SPEC, bucket_dim,
 from repro.core.lru import LRUCache
 from repro.core.problem import Layer, Workload
 from repro.core.search import SearchConfig, dosa_search, make_fused_runner
-from repro.serve.cosearch_service import (CoSearchService, ProgressEvent,
+from repro.serve.cosearch_service import (CoSearchService,
                                           ServiceConfig)
 
 WL = Workload(layers=(Layer.conv(32, 64, 3, 28, name="c"),
@@ -65,11 +66,44 @@ def test_same_structure_requests_share_one_engine():
         svc.drain()
         task = svc._tasks[0]
         run_fused = make_fused_runner(task.workload, task.cfg0)[0]
-        assert run_fused._cache_size() == 1
+        contracts.assert_no_recompile(run_fused)
         # one engine entry in the service-wide cache, hit on reuse
         stats = search_mod.engine_cache_stats()
         assert stats["size"] == 1
         assert stats["hits"] >= 1
+    finally:
+        search_mod._ENGINE_CACHE = old
+
+
+def test_multi_request_step_never_recompiles_across_buckets():
+    """The serving recompile guard: a stream of step()-driven requests
+    whose raw shapes differ but bucket onto one canonical workload is
+    answered by exactly ONE compiled engine — and a second stream on
+    the same bucket stays warm."""
+    old = search_mod._ENGINE_CACHE
+    search_mod._ENGINE_CACHE = LRUCache(maxsize=16)
+    try:
+        svc = CoSearchService(ServiceConfig(bucket_workloads=True))
+        # off-ladder shapes that pad to the same canonical workload
+        wls = (Workload(layers=(Layer.conv(30, 60, 3, 27, name="x"),),
+                        name="a"),
+               Workload(layers=(Layer.conv(31, 62, 3, 26, name="y"),),
+                        name="b"))
+        assert bucket_workload(wls[0]) == bucket_workload(wls[1])
+        for seed, wl in zip((1, 2), wls):
+            svc.submit(_req(seed, wl=wl))
+        while svc.step():          # drive segment by segment
+            pass
+        task = svc._tasks[0]
+        engine = make_fused_runner(task.workload, task.cfg0)[0]
+        contracts.assert_no_recompile(engine)
+        # A fresh same-size stream on the same bucket replays through
+        # the warm engine (same member bucket -> same traced shapes).
+        for seed, wl in zip((3, 4), wls):
+            svc.submit(_req(seed, wl=wl))
+        svc.drain()
+        contracts.assert_no_recompile(engine)
+        assert search_mod.engine_cache_stats()["size"] == 1
     finally:
         search_mod._ENGINE_CACHE = old
 
@@ -121,7 +155,7 @@ def test_bucketed_edp_within_tolerance():
     served = svc.drain()[rid].result.best_edp
     direct = dosa_search(wl, cfg, population=2, fused=True).best_edp
     inflation = np.prod([bucket_dim(d) / d
-                         for l in wl.layers for d in l.dims])
+                         for lay in wl.layers for d in lay.dims])
     assert served >= direct * 0.999        # padding only adds work
     assert served <= direct * inflation**2 * 1.5
 

@@ -2,7 +2,6 @@
 import hypothesis
 import hypothesis.strategies as st
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,7 +9,7 @@ from repro.core.arch import TPU_V5E
 from repro.core.autotune import round_block, tune_matmul_blocks
 from repro.core.tpu_model import (matmul_latency, model_flops,
                                   mxu_utilization, step_roofline,
-                                  vmem_footprint, vmem_penalty)
+                                  vmem_penalty)
 
 
 @hypothesis.settings(max_examples=60, deadline=None)
@@ -78,8 +77,8 @@ def test_abstract_init_allocates_nothing():
     model = build_model(cfg)
     shapes, specs = model.abstract_init(jax.random.PRNGKey(0))
     leaves = jax.tree.leaves(shapes)
-    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
-    total = sum(np.prod(l.shape) for l in leaves)
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+    total = sum(np.prod(x.shape) for x in leaves)
     assert total > 9e11        # ~1T params described
     from jax.sharding import PartitionSpec
     assert all(isinstance(s, PartitionSpec) for s in jax.tree.leaves(

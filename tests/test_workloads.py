@@ -1,10 +1,8 @@
 """Workload extraction tests: DNN zoo + LM-arch lowering."""
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import SHAPES, shape_applicable
-from repro.core.problem import Layer
 from repro.workloads import dnn_zoo
 from repro.workloads.lm_extract import extract
 
