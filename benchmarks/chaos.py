@@ -1,0 +1,195 @@
+"""Chaos gate: the serving runtime under deterministic fault injection.
+
+Runs the same request stream twice — once clean, once under a seeded
+`runtime.chaos.ChaosMonkey` schedule (transient engine faults, torn
+checkpoint writes, a mid-stream process kill/resume) — and gates CI on
+the serving layer's recovery contract:
+
+* **bit-identical healthy answers** — every request that completes
+  under chaos returns exactly the clean run's result (EDP, eval count,
+  history);
+* **poison containment** — a deterministically-failing request is
+  quarantined with a structured ``error`` outcome while its batch
+  siblings still answer bit-identically;
+* **structured timeouts** — a segment-budgeted request finalizes as
+  ``timeout`` with a partial best-so-far result;
+* **faults actually fired** — the injection counters are non-zero, so
+  a green gate can't mean "nothing was tested".
+
+Writes ``bench_results/chaos_metrics.json`` and merges the fault
+section into ``serve_metrics.json`` when the serve benchmark already
+produced it (CI uploads both).
+"""
+from __future__ import annotations
+
+import json
+
+from .common import OUTPUT_DIR, Row, Timer, save_json
+
+
+def _requests(steps, round_every, n_sp, seeds):
+    from repro.api import SearchRequest
+    from repro.core.problem import Layer, Workload
+    from repro.core.search import SearchConfig
+
+    wl = Workload(layers=(Layer.matmul(64, 64, 64, name="a"),),
+                  name="mm64")
+    return [SearchRequest(workload=wl,
+                          config=SearchConfig(steps=steps,
+                                              round_every=round_every,
+                                              n_start_points=n_sp,
+                                              seed=seed))
+            for seed in seeds]
+
+
+def _outcome_key(out):
+    r = out.result
+    return (r.best_edp, r.n_evals, tuple(map(tuple, r.history)))
+
+
+def run(scale: str) -> list[Row]:
+    from repro.runtime.chaos import ChaosConfig, ChaosMonkey
+    from repro.serve.cosearch_service import (CoSearchService,
+                                              ServiceConfig)
+    import tempfile
+
+    if scale == "paper":
+        steps, round_every, n_sp = 100, 25, 2
+        seeds = list(range(4))
+    else:
+        steps, round_every, n_sp = 30, 10, 2
+        seeds = list(range(3))
+
+    # ---- clean reference run (no chaos, no checkpoints)
+    clean_reqs = _requests(steps, round_every, n_sp, seeds)
+    svc = CoSearchService(ServiceConfig(bucket_workloads=False))
+    for r in clean_reqs:
+        svc.submit(r)
+    clean_outs = svc.drain()
+    clean = {r.request_id: _outcome_key(clean_outs[r.request_id])
+             for r in clean_reqs}
+
+    # ---- chaos run: transient faults + torn checkpoints + kill/resume
+    chaos_reqs = _requests(steps, round_every, n_sp, seeds)
+    monkey = ChaosMonkey(ChaosConfig(seed=7, p_transient=0.25,
+                                     p_torn_checkpoint=0.5,
+                                     max_faults=6))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        def make_service():
+            # retry budget (8) strictly exceeds the injection cap (6):
+            # the gate tests recovery, not give-up.
+            return CoSearchService(ServiceConfig(
+                bucket_workloads=False, checkpoint_dir=ckpt_dir,
+                max_restarts=8, backoff_base_s=1e-4,
+                gc_completed=False))
+
+        svc2 = make_service()
+        monkey.attach(svc2)
+        for r in chaos_reqs:
+            svc2.submit(r)
+        with Timer() as t_chaos:
+            for _ in range(2):          # let tasks start + checkpoint
+                svc2.step()
+            # mid-stream process kill: abandon svc2, resume from disk
+            svc2 = monkey.kill_resume(svc2, make_service, chaos_reqs)
+            chaotic = svc2.drain()
+        fault_section = svc2.stats()["faults"]
+    injected = monkey.stats()
+
+    survived = {rid: _outcome_key(o) for rid, o in chaotic.items()
+                if o.status == "ok"}
+    identical = (set(survived) == set(clean)
+                 and all(survived[rid] == clean[rid] for rid in clean))
+
+    # ---- poison containment: one request's task deterministically
+    # raises ValueError; the batch must split, siblings must still
+    # answer bit-identically, the poison request must quarantine.
+    poison_reqs = _requests(steps, round_every, n_sp, seeds)
+    target = poison_reqs[-1].request_id
+
+    def poison_hook(task_id, seg, request_ids):
+        if target in request_ids:
+            raise ValueError(f"chaos: poison input {target}")
+
+    svc3 = CoSearchService(ServiceConfig(bucket_workloads=False,
+                                         backoff_base_s=0.0))
+    svc3.fault_hook = poison_hook
+    for r in poison_reqs:
+        svc3.submit(r)
+    poisoned = svc3.drain()
+    pfaults = svc3.stats()["faults"]
+    quarantined_out = poisoned[target]
+    siblings_ok = all(
+        poisoned[r.request_id].status == "ok"
+        and _outcome_key(poisoned[r.request_id]) == clean[r.request_id]
+        for r in poison_reqs if r.request_id != target)
+    poison_contained = (quarantined_out.status == "error"
+                        and quarantined_out.error is not None
+                        and quarantined_out.error["fault_class"]
+                        == "poison"
+                        and pfaults["quarantined"] == 1
+                        and pfaults["batch_splits"] == 1
+                        and siblings_ok)
+
+    # ---- structured timeout: a segment-budgeted request finalizes as
+    # "timeout" with a partial result while its siblings run to done.
+    to_reqs = _requests(steps, round_every, n_sp, seeds)
+    import dataclasses as _dc
+    to_reqs[0] = _dc.replace(to_reqs[0], segment_budget=1)
+    svc4 = CoSearchService(ServiceConfig(bucket_workloads=False))
+    for r in to_reqs:
+        svc4.submit(r)
+    timed = svc4.drain()
+    t_out = timed[to_reqs[0].request_id]
+    timeout_ok = (t_out.status == "timeout" and not t_out.ok
+                  and t_out.error["reason"] == "segment_budget"
+                  and t_out.result is not None
+                  and all(timed[r.request_id].status == "ok"
+                          for r in to_reqs[1:]))
+
+    metrics = {
+        "scale": scale,
+        "n_requests": len(seeds),
+        "injected": injected,
+        "fault_section": fault_section,
+        "poison_faults": pfaults,
+        "healthy_bit_identical": bool(identical),
+        "poison_contained": bool(poison_contained),
+        "timeout_structured": bool(timeout_ok),
+        "chaos_drain_s": t_chaos.seconds,
+    }
+    save_json("chaos_metrics", metrics)
+
+    # Merge the live fault section into serve_metrics.json when the
+    # serve benchmark already produced it, so one artifact carries the
+    # whole serving story (CI uploads it).
+    serve_path = OUTPUT_DIR / "serve_metrics.json"
+    if serve_path.is_file():
+        with open(serve_path) as f:
+            serve_metrics = json.load(f)
+        serve_metrics["faults_under_chaos"] = metrics
+        with open(serve_path, "w") as f:
+            json.dump(serve_metrics, f, indent=1, default=float)
+
+    n_inj = injected["transient"] + injected["torn_checkpoint"]
+    if n_inj == 0 or injected["kills"] == 0:
+        raise RuntimeError(f"chaos schedule injected nothing: {injected}")
+    if not identical:
+        raise RuntimeError("healthy requests diverged under chaos: "
+                           f"{survived} != {clean}")
+    if not poison_contained:
+        raise RuntimeError(
+            f"poison request not contained: outcome={quarantined_out} "
+            f"faults={pfaults} siblings_ok={siblings_ok}")
+    if not timeout_ok:
+        raise RuntimeError(f"segment-budget timeout malformed: {t_out}")
+
+    return [
+        Row("chaos_drain", t_chaos.seconds * 1e6 / len(seeds),
+            f"injected={n_inj} kills={injected['kills']} "
+            f"identical={identical}"),
+        Row("chaos_poison", pfaults["quarantined"],
+            f"splits={pfaults['batch_splits']} siblings_ok={siblings_ok}"),
+        Row("chaos_timeout", 1.0 if timeout_ok else 0.0,
+            f"status={t_out.status} partial={t_out.result is not None}"),
+    ]

@@ -13,7 +13,7 @@ from .common import scale
 
 BENCHES = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10_11", "fig12",
            "roofline", "tpu_autotune", "multi_target", "fleet", "timing",
-           "calibration", "serve", "analysis")
+           "calibration", "serve", "chaos", "analysis")
 
 _MODULES = {
     "analysis": "benchmarks.analysis",
@@ -22,6 +22,7 @@ _MODULES = {
     "timing": "benchmarks.timing",
     "calibration": "benchmarks.calibration",
     "serve": "benchmarks.serve",
+    "chaos": "benchmarks.chaos",
     "fig4": "benchmarks.fig4_correlation",
     "fig6": "benchmarks.fig6_loop_ordering",
     "fig7": "benchmarks.fig7_cosearch",
@@ -43,6 +44,7 @@ _ARTIFACTS = {
     "timing": ("search_timing.json",),
     "calibration": ("calibration_metrics.json",),
     "serve": ("serve_metrics.json",),
+    "chaos": ("chaos_metrics.json",),
     "fig4": ("fig4.json",),
     "fig6": ("fig6.json",),
     "fig7": ("fig7.json",),

@@ -59,6 +59,13 @@ class SearchRequest:
     streaming responses and checkpoints; it defaults to a deterministic
     fingerprint of the request so retried submissions resume the same
     checkpointed task.
+
+    `priority`, `deadline_s` and `segment_budget` are *scheduling
+    hints* for the serving layer (weighted round-robin share, wall-clock
+    timeout, max rounding segments before a partial-result timeout).
+    They are deliberately excluded from the fingerprint: the same query
+    resubmitted at a different priority must dedup onto the same
+    in-flight task.
     """
     workload: Workload | Iterable[Workload]
     config: SearchConfig = dataclasses.field(default_factory=SearchConfig)
@@ -66,6 +73,9 @@ class SearchRequest:
     population: int | None = None               # engine population size
     fused: bool = True
     request_id: str | None = None
+    priority: int = 0                  # serving: higher = larger share
+    deadline_s: float | None = None    # serving: wall-clock budget
+    segment_budget: int | None = None  # serving: max rounding segments
 
     def __post_init__(self):
         if self.specs is not None:
@@ -81,6 +91,17 @@ class SearchRequest:
         if self.specs is None and not isinstance(self.workload, Workload):
             raise ValueError("single-target requests take one Workload; "
                              "pass specs=(...) for a portfolio request")
+        if not isinstance(self.priority, int):
+            raise ValueError(f"priority must be an int, "
+                             f"got {self.priority!r}")
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0 or None, "
+                             f"got {self.deadline_s!r}")
+        if self.segment_budget is not None and (
+                not isinstance(self.segment_budget, int)
+                or self.segment_budget < 1):
+            raise ValueError(f"segment_budget must be a positive int or "
+                             f"None, got {self.segment_budget!r}")
         if self.request_id is None:
             self.request_id = self.fingerprint()
 
@@ -111,21 +132,45 @@ class SearchRequest:
 
 @dataclasses.dataclass
 class SearchOutcome:
-    """The response half of the API: who asked, what was found."""
+    """The response half of the API: who asked, what was found — and
+    under what health.
+
+    `status` is the structured serving verdict:
+
+    * ``"ok"`` — completed normally; `result` is the full answer.
+    * ``"degraded"`` — completed, but through a fallback path
+      (`degraded` names each mode, e.g. ``surrogate_fallback`` when the
+      learned latency model failed and the analytical model answered,
+      or ``shard_fallback`` after a multi-device shard loss).
+    * ``"timeout"`` — the request's deadline/segment budget expired;
+      `result` is the best-so-far *partial* answer, `error` says which
+      budget ran out.
+    * ``"error"`` — quarantined poison input or exhausted retries;
+      `result` is None and `error` carries the structured fault record
+      (`runtime.faults.fault_record`).
+    """
     request_id: str
-    result: ResultLike
+    result: ResultLike | None
+    status: str = "ok"
+    error: dict | None = None
+    degraded: tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("ok", "degraded")
 
     @property
     def best_edp(self) -> float:
-        return self.result.best_edp
+        return self.result.best_edp if self.result is not None \
+            else float("inf")
 
     @property
     def history(self) -> list[tuple[int, float]]:
-        return self.result.history
+        return self.result.history if self.result is not None else []
 
     @property
     def n_evals(self) -> int:
-        return self.result.n_evals
+        return self.result.n_evals if self.result is not None else 0
 
 
 def _workload_repr(w: Workload) -> list:

@@ -67,6 +67,27 @@ class LRUCache:
             self.put(key, hit)
         return hit
 
+    def pop_lru(self):
+        """Remove and return the least-recently-used ``(key, value)``
+        pair (counted as an eviction), or ``None`` when empty.  The
+        checkpoint garbage collector uses this to sweep the oldest task
+        directories first."""
+        if not self._data:
+            return None
+        item = self._data.popitem(last=False)
+        self.evictions += 1
+        return item
+
+    def discard(self, key) -> None:
+        """Drop `key` if present, without stats side effects — for
+        entries whose backing resource was deleted out of band."""
+        self._data.pop(key, None)
+
+    def keys(self):
+        """Keys in LRU-to-MRU order (a snapshot list, safe to mutate
+        the cache while iterating)."""
+        return list(self._data.keys())
+
     def clear(self, reset_stats: bool = False) -> None:
         self._data.clear()
         if reset_stats:

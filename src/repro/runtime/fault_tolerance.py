@@ -31,6 +31,7 @@ import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
 from ..data.pipeline import DataConfig, make_batch
+from . import faults
 
 
 @dataclasses.dataclass
@@ -100,7 +101,9 @@ def train_with_recovery(train_step: Callable, params, opt_state,
             if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
                 ckpt.save(ckpt_dir, step,
                           {"params": params, "opt": opt_state})
-        except (FloatingPointError, RuntimeError) as e:
+        # Shared fault taxonomy (runtime.faults): only transient-class
+        # faults are worth a rollback-retry; poison/fatal propagate.
+        except faults.TRANSIENT_TYPES as e:
             restarts += 1
             log(f"[driver] step {step} failed ({e}); restart "
                 f"{restarts}/{cfg.max_restarts}")

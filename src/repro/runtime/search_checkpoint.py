@@ -11,20 +11,38 @@ population is the complete search state (theta restarts from the
 rounded integer logs each segment), and the recorder snapshot restores
 `n_evals`, `history`, `start_edps` and the running best exactly.
 
-Failure handling mirrors `runtime.fault_tolerance`: a segment that
-raises rolls the task back to its last checkpoint and retries, with
-`max_restarts` bounding the budget.
+Failure handling follows the shared `runtime.faults` taxonomy: a
+segment that raises a transient fault rolls the task back to its last
+checkpoint and retries with backoff.  Restore is crash-consistent: a
+torn/partial checkpoint (truncated arrays.npz, mangled meta.json) is
+skipped and the previous good step is restored instead — deterministic
+replay from an older checkpoint reaches the same final state.
+
+Disk hygiene (`CheckpointGC`): completed tasks delete their checkpoint
+directory on drain, and total checkpoint disk is bounded by an LRU
+sweep over task directories (recency tracked through `core.lru`,
+primed from directory mtimes on restart).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import shutil
+import zipfile
 from pathlib import Path
 
 import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
 from ..core.hw_infer import minimal_hw_for
+from ..core.lru import LRUCache
 from ..core.mapping import stack_mappings, unstack_mappings
+
+# What a torn/partial/corrupt checkpoint read raises: truncated npz
+# (BadZipFile/OSError/EOFError), mangled meta.json (JSONDecodeError is
+# a ValueError), missing keys after a partial write (KeyError).
+CORRUPT_CHECKPOINT_FAULTS = (OSError, EOFError, KeyError, ValueError,
+                             zipfile.BadZipFile, json.JSONDecodeError)
 
 
 def recorder_state(rec) -> dict:
@@ -94,17 +112,123 @@ def save_task(root: str | Path, task_id: str, seg_idx: int,
                           "n_requests": len(rec_states)})
 
 
+def _step_ids(d: Path) -> list[int]:
+    """Step indices present on disk, newest first — read from the
+    directory listing, NOT the LATEST pointer, so a good older step is
+    reachable even when the newest write was torn."""
+    if not d.is_dir():
+        return []
+    steps = []
+    for child in d.iterdir():
+        name = child.name
+        if child.is_dir() and name.startswith("step_") \
+                and name.split("_")[1].isdigit():
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps, reverse=True)
+
+
 def restore_task(root: str | Path, task_id: str
                  ) -> tuple[int, np.ndarray, np.ndarray, list[dict]] | None:
-    """Load the latest checkpoint of a task, or None if it has none.
-    Returns (segments_done, theta, orders, recorder snapshots)."""
+    """Load the newest *readable* checkpoint of a task, or None if it
+    has no intact one.  Returns (segments_done, theta, orders, recorder
+    snapshots).
+
+    Crash consistency: a corrupt or partial newest step (torn write,
+    bitrot) is skipped and the previous good step restores instead —
+    the serving layer's replay is deterministic, so resuming from an
+    older segment reaches a bit-identical final state."""
     d = task_dir(root, task_id)
-    step = ckpt.latest_step(d)
-    if step is None:
-        return None
-    seg_idx, state = ckpt.restore(d, step)
-    # checkpoint._unflatten turns the digit-keyed recs dict back into a
-    # tuple ordered by request index.
-    rec_states = list(state["recs"])
-    return seg_idx, np.asarray(state["theta"]), \
-        np.asarray(state["orders"]), rec_states
+    for step in _step_ids(d):
+        try:
+            seg_idx, state = ckpt.restore(d, step)
+            rec_states = list(state["recs"])
+            return seg_idx, np.asarray(state["theta"]), \
+                np.asarray(state["orders"]), rec_states
+        except CORRUPT_CHECKPOINT_FAULTS:
+            continue   # torn/partial: fall back to the previous step
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Garbage collection
+# ---------------------------------------------------------------------------
+
+def dir_bytes(path: Path) -> int:
+    """Total bytes under `path` (0 if it does not exist)."""
+    path = Path(path)
+    if not path.is_dir():
+        return 0
+    return sum(f.stat().st_size for f in path.rglob("*") if f.is_file())
+
+
+def delete_task(root: str | Path, task_id: str) -> int:
+    """Remove one task's checkpoint directory; returns bytes freed."""
+    d = task_dir(root, task_id)
+    freed = dir_bytes(d)
+    if d.is_dir():
+        shutil.rmtree(d)
+    return freed
+
+
+class CheckpointGC:
+    """Bounds total checkpoint disk under `root`.
+
+    Recency is tracked through a `core.lru.LRUCache` (task_id -> True):
+    every save/restore `touch()`es its task, completed tasks `remove()`
+    on drain, and `sweep()` deletes least-recently-used task dirs until
+    the total is back under `max_bytes` (None = unbounded; completed-
+    task deletion still applies).  On construction the LRU is primed
+    from directory mtimes, so a restarted server sweeps sanely."""
+
+    def __init__(self, root: str | Path, max_bytes: int | None = None,
+                 max_tasks: int = 4096):
+        self.root = Path(root)
+        self.max_bytes = max_bytes
+        self._lru = LRUCache(maxsize=max_tasks)
+        self.removed_tasks = 0
+        self.bytes_freed = 0
+        if self.root.is_dir():
+            dirs = [d for d in self.root.iterdir()
+                    if d.is_dir() and d.name.startswith("task_")]
+            for d in sorted(dirs, key=lambda p: p.stat().st_mtime):
+                self._lru.put(d.name[len("task_"):], True)
+
+    def touch(self, task_id: str) -> None:
+        self._lru.put(task_id, True)
+
+    def remove(self, task_id: str) -> int:
+        """Drop a completed task's checkpoints (drain-time GC)."""
+        freed = delete_task(self.root, task_id)
+        self._lru.discard(task_id)
+        if freed:
+            self.removed_tasks += 1
+            self.bytes_freed += freed
+        return freed
+
+    def total_bytes(self) -> int:
+        return dir_bytes(self.root)
+
+    def sweep(self) -> list[str]:
+        """LRU-sweep task dirs until total disk <= max_bytes.  Returns
+        the task_ids removed."""
+        if self.max_bytes is None:
+            return []
+        swept = []
+        while len(self._lru) > 1 and self.total_bytes() > self.max_bytes:
+            item = self._lru.pop_lru()
+            if item is None:
+                break
+            task_id = item[0]
+            freed = delete_task(self.root, task_id)
+            if freed:
+                self.removed_tasks += 1
+                self.bytes_freed += freed
+            swept.append(task_id)
+        return swept
+
+    def stats(self) -> dict:
+        return {"removed_tasks": self.removed_tasks,
+                "bytes_freed": self.bytes_freed,
+                "live_tasks": len(self._lru),
+                "live_bytes": self.total_bytes(),
+                "max_bytes": self.max_bytes}

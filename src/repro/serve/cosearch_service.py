@@ -1,16 +1,20 @@
-"""Co-search serving layer: a persistent warm-engine search server.
+"""Co-search serving layer: a persistent, fault-hardened search server.
 
 `CoSearchService` turns the one-loop engine into infrastructure: it
 accepts a stream of `repro.api.SearchRequest`s and answers each one
 with the same result the synchronous entry points would return, while
-amortizing engine compiles across the stream.
+amortizing engine compiles across the stream — and it keeps answering
+under injected failure (chaos-tested: `runtime.chaos`).
 
 Request lifecycle
 -----------------
 1. **submit** — the request's workload is canonicalized
    (`archspec.bucket_workload`: dims pad up to the divisor-rich ladder,
    layer names canonicalize) so heterogeneous queries collapse onto a
-   bounded set of engine shapes; the request joins the pending queue.
+   bounded set of engine shapes; identical request *fingerprints*
+   dedup onto one in-flight task (the duplicate shares its events and
+   outcome; counted in `stats()["faults"]["dedup_hits"]`); the request
+   joins the pending queue with its priority/deadline/segment budget.
 2. **batching** — pending requests group by batch key: the canonical
    workload + the spec's structural `engine_group_key` + every config
    field the traced engine reads (seeds excluded — requests that differ
@@ -22,20 +26,36 @@ Request lifecycle
    bit-identical to running it alone.  Mixed-spec groups (same
    structural group, different numeric tables) batch through the fleet
    engine (`fleet.search_group_results`) with per-request configs.
-3. **advance** — `step()` runs one rounding segment of one task as a
-   single fused device program (`make_fused_runner` with `n_full=1`);
-   the population axis is padded up to a canonical member-bucket size
-   by replicating the last member, so distinct batch sizes reuse one
-   compiled shape.  After each segment the host replays oracle
-   accounting per request and emits a `ProgressEvent` stream
-   (best-EDP-so-far, Pareto-point updates).
-4. **checkpoint / resume** — with `checkpoint_dir` set, the task state
-   (rounded population + per-request recorder snapshots) checkpoints
-   every `checkpoint_every` segments via `runtime.search_checkpoint`;
-   a killed server resumes the task bit-identically, and a segment that
-   raises rolls back to the last checkpoint (`max_restarts` bounds the
-   retry budget, mirroring `runtime.fault_tolerance`).
-5. **done** — `outcome(request_id)` / `drain()` return `SearchOutcome`s
+3. **scheduling** — `step()` advances ONE task by one rounding segment,
+   chosen by weighted round-robin: each runnable task earns credit
+   proportional to `1 + max(request priorities)` per scheduling round
+   and the highest-credit task runs, so high-priority work gets a
+   proportionally larger share without starving the rest.  Requests
+   whose wall-clock `deadline_s` or `segment_budget` expires finalize
+   immediately with a structured ``timeout`` outcome carrying the
+   best-so-far partial result; their population slots keep advancing
+   inertly (removing them would force a recompile).
+4. **fault handling** — a segment that raises is classified by the
+   shared `runtime.faults` taxonomy: *transient* faults (RuntimeError /
+   OSError / FloatingPointError) roll back to the last checkpoint and
+   retry with per-task exponential backoff; a *poison* fault (the same
+   signature re-failing a bit-identical replay — e.g. a ValueError that
+   proves deterministic) splits the batch into singleton tasks so
+   sibling requests replay cleanly, and the poison singleton is
+   quarantined with a structured ``error`` outcome instead of burning
+   the batch's retry budget; *fatal* faults propagate immediately.
+   Graceful degradation: a failing learned latency model strips to the
+   analytical model, and a multi-device shard loss re-resolves the
+   engine to ``shards=1`` — both continue and flag the outcome
+   ``degraded``.
+5. **checkpoint / resume / GC** — with `checkpoint_dir` set, the task
+   state checkpoints every `checkpoint_every` segments via
+   `runtime.search_checkpoint`; a killed server resumes the task
+   bit-identically, restore falls back past torn/partial checkpoint
+   files to the previous good step, completed tasks delete their
+   checkpoints on drain, and total checkpoint disk is bounded by an
+   LRU sweep (`checkpoint_max_bytes`).
+6. **done** — `outcome(request_id)` / `drain()` return `SearchOutcome`s
    whose results are seeded-identical to direct `dosa_search` on the
    canonical workload (bit-identical to the original workload whenever
    its dims already sit on the canonical ladder, since padding is then
@@ -45,11 +65,15 @@ Bucketing policy: padding a dim only adds MACs/words, so the canonical
 problem's EDP upper-bounds the original's; off-ladder queries trade a
 < 34%-per-dim problem inflation for a bounded compile set (policy test:
 tests/test_serve.py::test_bucketed_edp_within_tolerance).
+
+The transport front-end (`serve.server`) drives this cooperative core
+from a single scheduler thread behind a threaded HTTP/JSON endpoint.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Callable
 
 import jax.numpy as jnp
@@ -68,14 +92,8 @@ from ..core.search import (SearchConfig, _Recorder, _generate_start_point,
                            shard_population, theta_from_population)
 from ..launch.mesh import auto_pop_shards
 from ..core.fleet import fleet_engine_cache_stats
+from ..runtime import faults
 from ..runtime import search_checkpoint as sckpt
-
-# The fault classes a segment retry can recover from: device/runtime
-# faults (preemption, OOM — jax surfaces them as RuntimeError
-# subclasses), checkpoint I/O failures, and bad numeric state.
-# Anything else (KeyboardInterrupt, programming errors like
-# AttributeError) propagates immediately instead of burning retries.
-_RETRYABLE_FAULTS = (RuntimeError, OSError, ValueError, FloatingPointError)
 
 
 @dataclasses.dataclass
@@ -87,7 +105,22 @@ class ServiceConfig:
     member_buckets: tuple = (1, 2, 4, 8, 16)  # canonical population sizes
     checkpoint_dir: str | None = None         # None: no persistence
     checkpoint_every: int = 1       # segments between checkpoints
-    max_restarts: int = 2           # rollback retries per task
+    max_restarts: int = 2           # transient retries per task
+    backoff_base_s: float = 0.02    # first-retry backoff delay
+    backoff_factor: float = 2.0     # backoff growth per retry
+    backoff_max_s: float = 1.0      # backoff ceiling
+    gc_completed: bool = True       # delete checkpoints on drain
+    checkpoint_max_bytes: int | None = None   # LRU disk sweep bound
+    # Injected clock/sleep (rule ND202: engine code never reads the
+    # wall clock directly); tests inject fakes for determinism.
+    clock_fn: Callable[[], float] = time.monotonic
+    sleep_fn: Callable[[float], None] = time.sleep
+
+    def retry_policy(self) -> faults.RetryPolicy:
+        return faults.RetryPolicy(max_retries=self.max_restarts,
+                                  backoff_base_s=self.backoff_base_s,
+                                  backoff_factor=self.backoff_factor,
+                                  backoff_max_s=self.backoff_max_s)
 
 
 @dataclasses.dataclass
@@ -103,6 +136,24 @@ class ProgressEvent:
     done: bool
 
 
+class _SplitBatch(Exception):
+    """Control flow task -> service: a poison fault hit a multi-request
+    batch; re-form it as singleton tasks so siblings replay cleanly."""
+
+    def __init__(self, record: dict):
+        super().__init__(record.get("message", "poison fault"))
+        self.record = record
+
+
+class _QuarantineTask(Exception):
+    """Control flow task -> service: this (singleton) task's input is
+    poison; finalize it with a structured error outcome."""
+
+    def __init__(self, record: dict):
+        super().__init__(record.get("message", "poison fault"))
+        self.record = record
+
+
 def _spec_of(cfg: SearchConfig):
     return cfg.spec if cfg.spec is not None else GEMMINI_SPEC
 
@@ -115,6 +166,12 @@ def _pad_size(n: int, buckets: tuple) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _task_weight(requests: list[SearchRequest]) -> int:
+    """Weighted-round-robin share of one task: proportional to its most
+    urgent member, never below 1."""
+    return max(1, 1 + max(r.priority for r in requests))
 
 
 def _best_point(rec: _Recorder):
@@ -132,6 +189,12 @@ def _best_point(rec: _Recorder):
     return (float(energy), float(latency))
 
 
+def _timeout_record(reason: str) -> dict:
+    return {"fault_class": "timeout", "type": "Deadline",
+            "message": f"request {reason} expired", "reason": reason,
+            "retries": 0}
+
+
 class _BatchTask:
     """One same-spec batch advancing through the fused single-target
     engine, one rounding segment per `advance()` call."""
@@ -147,14 +210,23 @@ class _BatchTask:
                                          self.cfg0.round_every)
         self.task_id = hashlib.sha256("/".join(
             r.request_id for r in self.requests).encode()).hexdigest()[:16]
+        self.weight = _task_weight(self.requests)
+        self.retry = faults.RetryState(svc_cfg.retry_policy())
         self.recs: list[_Recorder] = []
         self.spans: list[tuple[int, int]] = []
         self.theta: np.ndarray | None = None   # (P_real, L, 2, nl, 7)
         self.orders: np.ndarray | None = None  # (P_real, L, n_levels)
         self.seg_done = 0
-        self.restarts = 0
         self.started = False
         self.done = False
+        self.degraded: set[str] = set()
+        self.finalized: dict[str, SearchOutcome] = {}   # timed-out rids
+        self.checkpoint_hook: Callable | None = None
+        self._force_shards1 = False
+
+    @property
+    def restarts(self) -> int:
+        return self.retry.retries
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -219,6 +291,10 @@ class _BatchTask:
         sckpt.save_task(self.svc_cfg.checkpoint_dir, self.task_id,
                         self.seg_done, self.theta, self.orders,
                         [sckpt.recorder_state(rec) for rec in self.recs])
+        if self.checkpoint_hook is not None:
+            # chaos taps this to tear the file just written
+            self.checkpoint_hook(self.svc_cfg.checkpoint_dir,
+                                 self.task_id, self.seg_done)
 
     def _rollback(self) -> None:
         restored = None
@@ -233,9 +309,31 @@ class _BatchTask:
             self.theta, self.orders = theta, orders
             self.seg_done = seg_done
         else:
-            # No persistence: start generation is deterministic, so a
-            # full replay from scratch reaches the same state.
+            # No persistence (or every checkpoint torn): start
+            # generation is deterministic, so a full replay from
+            # scratch reaches the same state.
             self._start_fresh()
+
+    # -- degradation -------------------------------------------------------
+
+    def _strip_surrogate(self) -> bool:
+        """Learned-latency-model failure: fall back to the analytical
+        model and restart the task fresh (stale surrogate-era
+        checkpoints are deleted).  Flags every outcome ``degraded``."""
+        if self.cfg0.surrogate is None \
+                or "surrogate_fallback" in self.degraded:
+            return False
+        self.degraded.add("surrogate_fallback")
+        self.requests = [
+            dataclasses.replace(
+                r, config=dataclasses.replace(r.config, surrogate=None))
+            for r in self.requests]
+        self.cfg0 = self.requests[0].config
+        if self.svc_cfg.checkpoint_dir is not None:
+            sckpt.delete_task(self.svc_cfg.checkpoint_dir, self.task_id)
+        self._start_fresh()
+        self._checkpoint()
+        return True
 
     # -- one segment -------------------------------------------------------
 
@@ -243,8 +341,14 @@ class _BatchTask:
                 ) -> list[ProgressEvent]:
         """Run the next rounding segment as one fused device dispatch,
         replay per-request oracle accounting over the read-back, and
-        stream one event per request.  Raising work rolls back to the
-        last checkpoint and retries (`max_restarts`)."""
+        stream one event per live request.
+
+        Fault handling (shared taxonomy, `runtime.faults`): transient
+        faults roll back to the last checkpoint and retry after
+        exponential backoff; a shard loss re-resolves to ``shards=1``
+        (degraded); a surrogate failure strips to the analytical model
+        (degraded); deterministic re-failure raises `_SplitBatch` /
+        `_QuarantineTask` for the service to contain."""
         self.start()
         if self.done:
             return []
@@ -253,16 +357,39 @@ class _BatchTask:
             try:
                 self._advance_once(fault_hook)
                 break
-            except _RETRYABLE_FAULTS:
-                self.restarts += 1
-                if self.restarts > self.svc_cfg.max_restarts:
-                    raise
-                self._rollback()
+            except Exception as exc:   # classified below; fatal re-raised
+                if isinstance(exc, faults.ShardLossFault) \
+                        and not self._force_shards1:
+                    # degrade to the single-shard engine and continue
+                    self._force_shards1 = True
+                    self.degraded.add("shard_fallback")
+                    self._rollback()
+                    continue
+                if isinstance(exc, faults.SurrogateFault) \
+                        and self._strip_surrogate():
+                    continue
+                action, delay = self.retry.next_action(exc)
+                if action == faults.RETRY:
+                    if delay > 0.0:
+                        self.svc_cfg.sleep_fn(delay)
+                    self._rollback()
+                    continue
+                # poison or exhausted budget: surrogate configs get one
+                # analytical-fallback attempt before giving up
+                if self._strip_surrogate():
+                    continue
+                if action == faults.QUARANTINE:
+                    if len(self.requests) > 1:
+                        raise _SplitBatch(self.retry.last_fault) from exc
+                    raise _QuarantineTask(self.retry.last_fault) from exc
+                raise
         events = []
         n_seg = len(self.seg_lens)
         if self.seg_done >= n_seg:
             self.done = True
         for req, rec, pb in zip(self.requests, self.recs, prev_best):
+            if req.request_id in self.finalized:
+                continue   # timed out earlier; slot advances inertly
             improved = rec.best.best_edp < pb
             events.append(ProgressEvent(
                 request_id=req.request_id, segment=self.seg_done,
@@ -274,7 +401,8 @@ class _BatchTask:
 
     def _advance_once(self, fault_hook: Callable | None) -> None:
         if fault_hook is not None:
-            fault_hook(self.task_id, self.seg_done)
+            fault_hook(self.task_id, self.seg_done,
+                       tuple(r.request_id for r in self.requests))
         n_steps = self.seg_lens[self.seg_done]
         run_fused = make_fused_runner(self.workload, self.cfg0)[0]
 
@@ -292,8 +420,10 @@ class _BatchTask:
         # The service rides the sharded engine transparently: the padded
         # population shards over the "pop" mesh (per-member ops keep the
         # read-back bit-identical at any shard count), bounded by the
-        # batch config's `shards` knob.
-        shards = auto_pop_shards(p_pad, self.cfg0.shards)
+        # batch config's `shards` knob.  After a shard loss the task is
+        # pinned to the single-device program (bit-identical results).
+        shards = 1 if self._force_shards1 else \
+            auto_pop_shards(p_pad, self.cfg0.shards)
         theta_j, orders_j = shard_population(
             jnp.asarray(theta, dtype=jnp.float32), jnp.asarray(orders),
             shards)
@@ -322,10 +452,43 @@ class _BatchTask:
                 or self.seg_done >= len(self.seg_lens)):
             self._checkpoint()
 
-    def outcomes(self) -> list[SearchOutcome]:
-        return [SearchOutcome(request_id=req.request_id,
-                              result=rec.finish())
-                for req, rec in zip(self.requests, self.recs)]
+    # -- timeouts ----------------------------------------------------------
+
+    def expire_request(self, request_id: str,
+                       reason: str) -> SearchOutcome | None:
+        """Finalize one request whose deadline/segment budget expired:
+        a structured ``timeout`` outcome carrying the best-so-far
+        partial result.  Sibling members are untouched (the expired
+        slot keeps advancing inertly — dropping it would recompile)."""
+        if self.done or request_id in self.finalized:
+            return None
+        result = None
+        for req, rec in zip(self.requests, self.recs):
+            if req.request_id == request_id:
+                result = rec.finish() if self.recs else None
+        out = SearchOutcome(request_id=request_id, result=result,
+                            status="timeout",
+                            error=_timeout_record(reason),
+                            degraded=tuple(sorted(self.degraded)))
+        self.finalized[request_id] = out
+        if len(self.finalized) == len(self.requests):
+            self.done = True   # nobody left to serve; stop burning steps
+        return out
+
+    # -- results -----------------------------------------------------------
+
+    def final_outcomes(self) -> list[tuple[SearchRequest, SearchOutcome]]:
+        """(request, outcome) for every request not already finalized by
+        a timeout."""
+        status = "degraded" if self.degraded else "ok"
+        out = []
+        for req, rec in zip(self.requests, self.recs):
+            if req.request_id in self.finalized:
+                continue
+            out.append((req, SearchOutcome(
+                request_id=req.request_id, result=rec.finish(),
+                status=status, degraded=tuple(sorted(self.degraded)))))
+        return out
 
 
 class _GroupTask:
@@ -336,40 +499,96 @@ class _GroupTask:
 
     def __init__(self, svc_cfg: ServiceConfig, workload: Workload,
                  requests: list[SearchRequest]):
+        self.svc_cfg = svc_cfg
         self.workload = workload
         self.requests = sorted(requests, key=lambda r: r.request_id)
+        self.task_id = hashlib.sha256(("grp/" + "/".join(
+            r.request_id for r in self.requests)).encode()
+            ).hexdigest()[:16]
+        self.weight = _task_weight(self.requests)
+        self.retry = faults.RetryState(svc_cfg.retry_policy())
+        self.seg_done = 0
+        self.started = False
         self.done = False
+        self.degraded: set[str] = set()
+        self.finalized: dict[str, SearchOutcome] = {}
+        self.checkpoint_hook: Callable | None = None
 
     def advance(self, fault_hook: Callable | None = None
                 ) -> list[ProgressEvent]:
         if self.done:
             return []
-        specs = [_spec_of(r.config) for r in self.requests]
-        cfgs = [r.config for r in self.requests]
-        results = search_group_results(self.workload, specs,
-                                       self.requests[0].config,
-                                       fused=True, cfgs=cfgs)
+        self.started = True
+        while True:
+            try:
+                if fault_hook is not None:
+                    fault_hook(self.task_id, self.seg_done,
+                               tuple(r.request_id for r in self.requests))
+                specs = [_spec_of(r.config) for r in self.requests]
+                cfgs = [r.config for r in self.requests]
+                results = search_group_results(self.workload, specs,
+                                               self.requests[0].config,
+                                               fused=True, cfgs=cfgs)
+                break
+            except Exception as exc:   # classified; fatal re-raised
+                action, delay = self.retry.next_action(exc)
+                if action == faults.RETRY:
+                    if delay > 0.0:
+                        self.svc_cfg.sleep_fn(delay)
+                    continue   # stateless: a full rerun IS the rollback
+                if action == faults.QUARANTINE:
+                    if len(self.requests) > 1:
+                        raise _SplitBatch(self.retry.last_fault) from exc
+                    raise _QuarantineTask(self.retry.last_fault) from exc
+                raise
         self._results = results
+        self.seg_done = 1
         self.done = True
         events = []
         for req, sr in zip(self.requests, results):
+            if req.request_id in self.finalized:
+                continue
             events.append(ProgressEvent(
                 request_id=req.request_id, segment=1, n_segments=1,
                 n_evals=sr.n_evals, best_edp=sr.best_edp, improved=True,
                 best_point=None, done=True))
         return events
 
-    def outcomes(self) -> list[SearchOutcome]:
-        return [SearchOutcome(request_id=req.request_id, result=sr)
-                for req, sr in zip(self.requests, self._results)]
+    def expire_request(self, request_id: str,
+                       reason: str) -> SearchOutcome | None:
+        """Group tasks run in one shot: a deadline observed before the
+        shot finalizes the request with an empty timeout outcome."""
+        if self.done or request_id in self.finalized:
+            return None
+        out = SearchOutcome(request_id=request_id, result=None,
+                            status="timeout",
+                            error=_timeout_record(reason))
+        self.finalized[request_id] = out
+        if len(self.finalized) == len(self.requests):
+            self.done = True
+        return out
+
+    def final_outcomes(self) -> list[tuple[SearchRequest, SearchOutcome]]:
+        status = "degraded" if self.degraded else "ok"
+        out = []
+        for req, sr in zip(self.requests, self._results):
+            if req.request_id in self.finalized:
+                continue
+            out.append((req, SearchOutcome(
+                request_id=req.request_id, result=sr, status=status,
+                degraded=tuple(sorted(self.degraded)))))
+        return out
 
 
 class CoSearchService:
     """Persistent co-search server (single-threaded, cooperative).
 
-    `submit()` enqueues requests; `step()` advances one task by one
+    `submit()` enqueues requests (deduping identical fingerprints);
+    `step()` advances the weighted-round-robin-chosen task by one
     segment and returns the streamed events; `drain()` runs everything
-    to completion and returns `{request_id: SearchOutcome}`."""
+    to completion and returns `{request_id: SearchOutcome}` — including
+    structured ``timeout``/``error`` outcomes for expired/quarantined
+    requests."""
 
     def __init__(self, cfg: ServiceConfig | None = None):
         self.cfg = ServiceConfig() if cfg is None else cfg
@@ -381,20 +600,61 @@ class CoSearchService:
         self._n_batches = 0
         self._n_grouped = 0
         self.fault_hook: Callable | None = None
+        self.checkpoint_hook: Callable | None = None
+        # dedup + scheduling state
+        self._fp_to_rid: dict[str, str] = {}
+        self._aliases: dict[str, str] = {}      # duplicate rid -> canonical
+        self._req_by_id: dict[str, SearchRequest] = {}
+        self._deadlines: dict[str, faults.Deadline] = {}
+        self._credits: dict[str, float] = {}    # task_id -> WRR credit
+        self._task_order: dict[str, int] = {}   # task_id -> creation idx
+        self._task_seq = 0
+        # fault counters (folded from tasks as they retire)
+        self._dedup_hits = 0
+        self._quarantined = 0
+        self._batch_splits = 0
+        self._timeouts = 0
+        self._degraded_requests = 0
+        self._retired_retries = 0
+        self._retired_backoff_s = 0.0
+        self._gc = None
+        if self.cfg.checkpoint_dir is not None:
+            self._gc = sckpt.CheckpointGC(self.cfg.checkpoint_dir,
+                                          self.cfg.checkpoint_max_bytes)
 
     # -- intake ------------------------------------------------------------
 
     def submit(self, req: SearchRequest) -> str:
         """Enqueue one single-target request; returns its request_id.
-        The service always runs the fused population engine
+
+        Cross-request dedup: a request whose deterministic fingerprint
+        matches one already pending / in flight / completed attaches to
+        that task instead of spawning a new one — it shares the
+        original's events and outcome (`stats()` counts the hit).  The
+        service always runs the fused population engine
         (`population`/`fused` hints apply to the synchronous API only)."""
         if req.is_fleet:
             raise ValueError("the service batches single-target requests; "
                              "portfolio queries go through "
                              "api.run_request/fleet_search")
+        fp = req.fingerprint()
+        canon = self._fp_to_rid.get(fp)
+        if canon is not None:
+            self._dedup_hits += 1
+            if req.request_id != canon:
+                self._aliases[req.request_id] = canon
+            return req.request_id
+        self._fp_to_rid[fp] = req.request_id
+        self._req_by_id[req.request_id] = req
+        if req.deadline_s is not None:
+            self._deadlines[req.request_id] = faults.Deadline(
+                self.cfg.clock_fn, req.deadline_s)
         self._pending.append(req)
         self._events.setdefault(req.request_id, [])
         return req.request_id
+
+    def _rid(self, request_id: str) -> str:
+        return self._aliases.get(request_id, request_id)
 
     def _canon_workload(self, req: SearchRequest) -> Workload:
         return (bucket_workload(req.workload) if self.cfg.bucket_workloads
@@ -409,6 +669,13 @@ class CoSearchService:
                  id(cfg.surrogate) if cfg.surrogate is not None else None)
         return (engine_group_key(_spec_of(cfg)), wl, traced, extra)
 
+    def _register_task(self, task) -> None:
+        task.checkpoint_hook = self.checkpoint_hook
+        self._tasks.append(task)
+        self._credits[task.task_id] = 0.0
+        self._task_order[task.task_id] = self._task_seq
+        self._task_seq += 1
+
     def _form_batches(self) -> None:
         groups: dict[tuple, list[SearchRequest]] = {}
         for req in self._pending:
@@ -420,51 +687,177 @@ class CoSearchService:
                 chunk = reqs[lo:lo + self.cfg.batch_max]
                 specs = {_spec_of(r.config) for r in chunk}
                 if len(specs) == 1:
-                    self._tasks.append(_BatchTask(self.cfg, wl, chunk))
+                    self._register_task(_BatchTask(self.cfg, wl, chunk))
                 else:
-                    self._tasks.append(_GroupTask(self.cfg, wl, chunk))
+                    self._register_task(_GroupTask(self.cfg, wl, chunk))
                     self._n_grouped += 1
                 self._n_batches += 1
 
-    # -- progress ----------------------------------------------------------
+    # -- scheduling --------------------------------------------------------
 
-    def step(self) -> list[ProgressEvent]:
-        """Advance ONE unfinished task by one segment; returns the
-        events it streamed (empty when the service is idle)."""
-        if self._pending:
-            self._form_batches()
+    def _runnable(self) -> list:
+        return [t for t in self._tasks if not t.done]
+
+    def _next_task(self):
+        """Weighted round-robin: every runnable task earns `weight`
+        credit per scheduling round; the richest runs and pays the
+        round's total back.  Long-run share converges to
+        weight/sum(weights); ties break by task creation order."""
+        runnable = self._runnable()
+        if not runnable:
+            return None
+        total = sum(t.weight for t in runnable)
+        for t in runnable:
+            self._credits[t.task_id] += t.weight
+        chosen = max(runnable,
+                     key=lambda t: (self._credits[t.task_id],
+                                    -self._task_order[t.task_id]))
+        self._credits[chosen.task_id] -= total
+        return chosen
+
+    def _expire_requests(self) -> None:
+        """Finalize requests whose wall-clock deadline or segment
+        budget expired with a structured ``timeout`` outcome (partial
+        best-so-far result when the task has started)."""
         for task in self._tasks:
             if task.done:
                 continue
-            events = task.advance(self.fault_hook)
-            for ev in events:
-                self._events[ev.request_id].append(ev)
-                if ev.best_point is not None:
-                    self._frontier[ev.request_id] = ev.best_point
+            for req in list(task.requests):
+                rid = req.request_id
+                if rid in self._outcomes:
+                    continue
+                dl = self._deadlines.get(rid)
+                reason = None
+                if dl is not None and dl.expired():
+                    reason = "deadline"
+                elif (req.segment_budget is not None
+                        and task.seg_done >= req.segment_budget):
+                    reason = "segment_budget"
+                if reason is None:
+                    continue
+                out = task.expire_request(rid, reason)
+                if out is not None:
+                    self._timeouts += 1
+                    self._outcomes[rid] = out
             if task.done:
-                for req, out in zip(task.requests, task.outcomes()):
-                    self._outcomes[out.request_id] = out
-                    if out.request_id not in self._frontier:
-                        pt = _point_of(task.workload, req.config,
-                                       out.result)
-                        if pt is not None:
-                            self._frontier[out.request_id] = pt
-            return events
-        return []
+                self._retire(task)
+
+    # -- progress ----------------------------------------------------------
+
+    def busy(self) -> bool:
+        """Is there pending or in-flight work for `step()` to advance?"""
+        return bool(self._pending) or any(not t.done for t in self._tasks)
+
+    def knows(self, request_id: str) -> bool:
+        """Was this request_id (or an alias of it) ever submitted?"""
+        return self._rid(request_id) in self._events
+
+    def step(self, contain_fatal: bool = False) -> list[ProgressEvent]:
+        """Advance ONE unfinished task (WRR-chosen) by one segment;
+        returns the events it streamed (empty when the service is idle
+        or the step was spent containing a fault).
+
+        `contain_fatal=True` (the transport server's long-lived loop)
+        converts a fatal / retry-exhausted task fault into structured
+        ``error`` outcomes for its requests instead of propagating;
+        synchronous callers keep the default re-raise."""
+        if self._pending:
+            self._form_batches()
+        self._expire_requests()
+        task = self._next_task()
+        if task is None:
+            return []
+        task.checkpoint_hook = self.checkpoint_hook
+        try:
+            events = task.advance(self.fault_hook)
+        except _SplitBatch:
+            self._split(task)
+            return []
+        except _QuarantineTask as q:
+            self._quarantine(task, q.record)
+            return []
+        except Exception as exc:
+            if not contain_fatal:
+                raise
+            self._quarantine(task, faults.fault_record(
+                exc, faults.classify(exc), task.retry.retries))
+            return []
+        for ev in events:
+            self._events.setdefault(ev.request_id, []).append(ev)
+            if ev.best_point is not None:
+                self._frontier[ev.request_id] = ev.best_point
+        if self._gc is not None and isinstance(task, _BatchTask):
+            self._gc.touch(task.task_id)
+            self._gc.sweep()
+        if task.done:
+            for req, out in task.final_outcomes():
+                if out.request_id in self._outcomes:
+                    continue
+                self._outcomes[out.request_id] = out
+                if out.degraded:
+                    self._degraded_requests += 1
+                if out.request_id not in self._frontier \
+                        and out.result is not None:
+                    pt = _point_of(task.workload, req.config, out.result)
+                    if pt is not None:
+                        self._frontier[out.request_id] = pt
+            self._retire(task)
+        return events
+
+    def _retire(self, task) -> None:
+        """Fold a finished task's fault counters into the service totals
+        and garbage-collect its checkpoints."""
+        self._retired_retries += task.retry.retries
+        self._retired_backoff_s += task.retry.backoff_total_s
+        if self._gc is not None and self.cfg.gc_completed:
+            self._gc.remove(task.task_id)
+
+    def _split(self, task) -> None:
+        """Poison containment: re-form a multi-request batch as
+        singleton tasks.  Siblings replay deterministically from
+        scratch — a singleton run is bit-identical to its batch slice,
+        so healthy requests still answer exactly; the poison request
+        re-fails alone and quarantines without taking anyone with it."""
+        self._batch_splits += 1
+        self._tasks.remove(task)
+        self._retire(task)
+        for req in task.requests:
+            if req.request_id in self._outcomes:
+                continue
+            self._register_task(_BatchTask(self.cfg, task.workload, [req]))
+            self._n_batches += 1
+
+    def _quarantine(self, task, record: dict) -> None:
+        """Finalize a poison task with a structured error outcome."""
+        task.done = True
+        self._retire(task)
+        for req in task.requests:
+            rid = req.request_id
+            if rid in self._outcomes or rid in task.finalized:
+                continue
+            self._quarantined += 1
+            self._outcomes[rid] = SearchOutcome(
+                request_id=rid, result=None, status="error",
+                error=record)
 
     def drain(self) -> dict[str, SearchOutcome]:
-        """Run every pending/in-flight request to completion."""
+        """Run every pending/in-flight request to completion (normal,
+        degraded, timed out, or quarantined)."""
         while self._pending or any(not t.done for t in self._tasks):
             self.step()
-        return dict(self._outcomes)
+        out = dict(self._outcomes)
+        for alias, canon in self._aliases.items():
+            if canon in self._outcomes:
+                out[alias] = self._outcomes[canon]
+        return out
 
     # -- results -----------------------------------------------------------
 
     def events(self, request_id: str) -> list[ProgressEvent]:
-        return list(self._events.get(request_id, []))
+        return list(self._events.get(self._rid(request_id), []))
 
     def outcome(self, request_id: str) -> SearchOutcome | None:
-        return self._outcomes.get(request_id)
+        return self._outcomes.get(self._rid(request_id))
 
     def pareto_frontier(self) -> list[tuple]:
         """Non-dominated (request_id, energy, latency) points over every
@@ -479,10 +872,31 @@ class CoSearchService:
                 front.append((rid, e, lat))
         return sorted(front, key=lambda t: t[1])
 
+    def fault_stats(self) -> dict:
+        """The serving-runtime fault section `benchmarks/serve.py`
+        publishes: retry/backoff totals (live + retired tasks),
+        quarantine/split/timeout/degradation counts, dedup hits, and
+        checkpoint-GC accounting."""
+        # retired (done) tasks already folded their counters in
+        live = [t for t in self._tasks if not t.done]
+        live_retries = sum(t.retry.retries for t in live)
+        live_backoff = sum(t.retry.backoff_total_s for t in live)
+        return {
+            "retries": self._retired_retries + live_retries,
+            "backoff_s": self._retired_backoff_s + live_backoff,
+            "quarantined": self._quarantined,
+            "batch_splits": self._batch_splits,
+            "timeouts": self._timeouts,
+            "degraded_requests": self._degraded_requests,
+            "dedup_hits": self._dedup_hits,
+            "checkpoint_gc": None if self._gc is None
+            else self._gc.stats(),
+        }
+
     def stats(self) -> dict:
-        """Serving health: engine-cache hit/miss/eviction counters plus
-        batching composition — the numbers `benchmarks/serve.py`
-        publishes to serve_metrics.json."""
+        """Serving health: engine-cache hit/miss/eviction counters,
+        batching composition, and the fault/retry section — the numbers
+        `benchmarks/serve.py` publishes to serve_metrics.json."""
         return {
             "engine_cache": engine_cache_stats(),
             "fleet_engine_cache": fleet_engine_cache_stats(),
@@ -490,7 +904,10 @@ class CoSearchService:
             "n_grouped_batches": self._n_grouped,
             "n_requests_done": len(self._outcomes),
             "n_requests_pending": len(self._pending)
-            + sum(len(t.requests) for t in self._tasks if not t.done),
+            + sum(1 for t in self._tasks if not t.done
+                  for r in t.requests
+                  if r.request_id not in self._outcomes),
+            "faults": self.fault_stats(),
         }
 
 

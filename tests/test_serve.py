@@ -217,7 +217,7 @@ def test_fault_rollback_max_restarts(tmp_path):
     rid = svc.submit(SearchRequest(workload=WL, config=cfg))
     fails = {"n": 0}
 
-    def hook(task_id, seg):
+    def hook(task_id, seg, request_ids):
         if seg == 1 and fails["n"] < 2:
             fails["n"] += 1
             raise RuntimeError("injected preemption")
@@ -233,7 +233,7 @@ def test_fault_rollback_max_restarts(tmp_path):
                                          max_restarts=1))
     svc2.submit(_req(11))
 
-    def always_fail(task_id, seg):
+    def always_fail(task_id, seg, request_ids):
         raise RuntimeError("hard fault")
 
     svc2.fault_hook = always_fail

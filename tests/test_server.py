@@ -1,0 +1,184 @@
+"""Transport front-end tests: payload-boundary validation units plus a
+live HTTP round-trip against `serve.server.CoSearchServer` (ephemeral
+port, real sockets, stdlib client)."""
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core.archspec import TPU_V5E_SPEC
+from repro.core.problem import Layer, Workload
+from repro.core.search import SearchConfig, dosa_search
+from repro.serve.cosearch_service import ServiceConfig
+from repro.serve.server import CoSearchServer, parse_search_payload
+
+WL_JSON = {"name": "t", "layers": [{"matmul": [16, 16, 16],
+                                    "name": "a"}]}
+CFG_JSON = {"steps": 4, "round_every": 2, "n_start_points": 2,
+            "seed": 21}
+
+
+# ---------------------------------------------------------------------------
+# Boundary validation (no sockets)
+# ---------------------------------------------------------------------------
+
+def test_parse_payload_roundtrip():
+    req = parse_search_payload({"workload": WL_JSON, "config": CFG_JSON,
+                                "priority": 2, "segment_budget": 3})
+    assert req.workload == Workload(
+        layers=(Layer.matmul(16, 16, 16, name="a"),), name="t")
+    assert req.config.steps == 4 and req.config.seed == 21
+    assert req.priority == 2 and req.segment_budget == 3
+
+
+def test_parse_payload_explicit_dims_and_spec():
+    req = parse_search_payload({
+        "workload": {"layers": [{"dims": [1, 1, 8, 1, 8, 8, 1],
+                                 "repeat": 2}]},
+        "config": {"spec": "tpu_v5e"}})
+    assert req.workload.layers[0].dims == (1, 1, 8, 1, 8, 8, 1)
+    assert req.workload.layers[0].repeat == 2
+    assert req.config.spec is TPU_V5E_SPEC
+
+
+@pytest.mark.parametrize("payload,match", [
+    ([1, 2], "JSON object"),
+    ({"workload": WL_JSON, "bogus": 1}, "unknown request field"),
+    ({}, "needs a 'workload'"),
+    ({"workload": {"layers": []}}, "non-empty"),
+    ({"workload": {"layers": [{"dims": [1, 2]}]}}, "7 ints"),
+    ({"workload": {"layers": [{"nope": 1}]}}, "needs one of"),
+    ({"workload": WL_JSON, "config": {"stepz": 4}}, "not a serveable"),
+    ({"workload": WL_JSON, "config": {"steps": "many"}}, "must be int"),
+    ({"workload": WL_JSON, "config": {"spec": "hal9000"}},
+     "unknown spec"),
+    ({"workload": WL_JSON, "config": {"ordering_mode": "wat"}},
+     "ordering_mode"),
+    ({"workload": WL_JSON, "priority": "high"}, "priority"),
+    ({"workload": WL_JSON, "deadline_s": -1}, "deadline_s"),
+    ({"workload": WL_JSON, "request_id": 7}, "request_id"),
+])
+def test_parse_payload_rejects_malformed(payload, match):
+    with pytest.raises(ValueError, match=match):
+        parse_search_payload(payload)
+
+
+def test_parse_payload_zero_dim_rejected_by_layer():
+    """Semantic layer validation (dims >= 1) fires at the boundary."""
+    with pytest.raises(ValueError, match="dims must be >= 1"):
+        parse_search_payload(
+            {"workload": {"layers": [{"dims": [0, 1, 1, 1, 1, 1, 1]}]}})
+
+
+# ---------------------------------------------------------------------------
+# Live HTTP round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server():
+    srv = CoSearchServer(ServiceConfig(bucket_workloads=False))
+    host, port = srv.start()
+    yield srv, f"http://{host}:{port}"
+    srv.stop()
+
+
+def _post(base, path, body):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _get(base, path):
+    try:
+        with urllib.request.urlopen(base + path, timeout=30) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_http_submit_poll_result_matches_direct(server):
+    """The full wire path: POST a search, poll until done, compare the
+    JSON result against direct dosa_search for the same seed."""
+    srv, base = server
+    code, sub = _post(base, "/v1/search",
+                      {"workload": WL_JSON, "config": CFG_JSON})
+    assert code == 202 and not sub["deduplicated"]
+    rid = sub["request_id"]
+
+    assert srv.wait_idle(timeout=300)
+    code, out = _get(base, f"/v1/result/{rid}")
+    assert code == 200
+    assert out["status"] == "ok" and out["ok"]
+
+    wl = Workload(layers=(Layer.matmul(16, 16, 16, name="a"),),
+                  name="t")
+    direct = dosa_search(wl, SearchConfig(**CFG_JSON), population=2,
+                         fused=True)
+    assert out["best_edp"] == direct.best_edp
+    assert out["n_evals"] == direct.n_evals
+    assert out["history"] == [[e, v] for e, v in direct.history]
+
+    code, evs = _get(base, f"/v1/events/{rid}")
+    assert code == 200
+    assert [ev["segment"] for ev in evs["events"]] == [1, 2]
+    assert evs["events"][-1]["done"]
+
+    code, frontier = _get(base, "/v1/frontier")
+    assert code == 200 and len(frontier["frontier"]) == 1
+
+
+def test_http_dedup_flag(server):
+    srv, base = server
+    body = {"workload": WL_JSON, "config": CFG_JSON}
+    _, first = _post(base, "/v1/search", body)
+    _, second = _post(base, "/v1/search", body)
+    assert second["request_id"] == first["request_id"]
+    assert second["deduplicated"]
+    assert srv.wait_idle(timeout=300)
+
+
+def test_http_rejects_malformed_with_400(server):
+    _, base = server
+    for body, frag in [
+        ({"workload": WL_JSON, "config": {"stepz": 1}}, "serveable"),
+        ({"workload": {"layers": [{"dims": [1, 2]}]}}, "7 ints"),
+        ({"workload": WL_JSON, "config": {"spec": "nope"}},
+         "unknown spec"),
+        (None, "JSON object"),
+    ]:
+        code, out = _post(base, "/v1/search", body)
+        assert code == 400
+        assert frag in out["error"]["message"]
+    # malformed JSON body (not just malformed schema)
+    req = urllib.request.Request(
+        base + "/v1/search", data=b"{nope",
+        headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+
+
+def test_http_unknown_routes_and_ids(server):
+    _, base = server
+    assert _get(base, "/v1/result/doesnotexist")[0] == 404
+    assert _get(base, "/v1/events/doesnotexist")[0] == 404
+    assert _get(base, "/nope")[0] == 404
+    assert _post(base, "/nope", {})[0] == 404
+
+
+def test_http_health_and_stats(server):
+    srv, base = server
+    code, health = _get(base, "/v1/healthz")
+    assert code == 200 and health["ok"]
+    code, stats = _get(base, "/v1/stats")
+    assert code == 200
+    assert stats["n_requests_done"] >= 1
+    faults = stats["faults"]
+    assert faults["dedup_hits"] >= 1
+    assert "retries" in faults and "quarantined" in faults
