@@ -43,9 +43,40 @@ class Timer:
         return self.seconds * 1e6 / max(n_calls, 1)
 
 
+def run_meta() -> dict:
+    """Provenance stamped into every bench_results JSON: what code, on
+    what substrate, produced these numbers.  The timestamp is injected
+    (``REPRO_BENCH_TIMESTAMP``, e.g. CI's commit time) rather than read
+    from the wall clock, so re-running the same commit reproduces the
+    artifact byte-for-byte."""
+    import platform
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=Path(__file__).resolve().parent).stdout.strip() or None
+    except OSError:
+        sha = None
+    return {
+        "git_sha": os.environ.get("REPRO_BENCH_GIT_SHA", sha),
+        "jax_version": jax.__version__,
+        "device_count": jax.device_count(),
+        "platform": jax.devices()[0].platform,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "timestamp": os.environ.get("REPRO_BENCH_TIMESTAMP"),
+    }
+
+
 def save_json(name: str, payload) -> Path:
     OUTPUT_DIR.mkdir(parents=True, exist_ok=True)
     p = OUTPUT_DIR / f"{name}.json"
+    if isinstance(payload, dict) and "run_meta" not in payload:
+        payload = {**payload, "run_meta": run_meta()}
     with open(p, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return p

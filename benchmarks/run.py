@@ -13,7 +13,7 @@ from .common import scale
 
 BENCHES = ("fig4", "fig6", "fig7", "fig8", "fig9", "fig10_11", "fig12",
            "roofline", "tpu_autotune", "multi_target", "fleet", "timing",
-           "calibration", "serve", "chaos", "analysis")
+           "calibration", "serve", "chaos", "analysis", "obs")
 
 _MODULES = {
     "analysis": "benchmarks.analysis",
@@ -23,6 +23,7 @@ _MODULES = {
     "calibration": "benchmarks.calibration",
     "serve": "benchmarks.serve",
     "chaos": "benchmarks.chaos",
+    "obs": "benchmarks.obs",
     "fig4": "benchmarks.fig4_correlation",
     "fig6": "benchmarks.fig6_loop_ordering",
     "fig7": "benchmarks.fig7_cosearch",
@@ -45,6 +46,7 @@ _ARTIFACTS = {
     "calibration": ("calibration_metrics.json",),
     "serve": ("serve_metrics.json",),
     "chaos": ("chaos_metrics.json",),
+    "obs": ("obs_metrics.json",),
     "fig4": ("fig4.json",),
     "fig6": ("fig6.json",),
     "fig7": ("fig7.json",),

@@ -11,9 +11,10 @@ Compares, at a fixed population and step budget on unet:
   whole segment loop; the host touches start points and the final
   read-back only),
 
-plus per-stage micro-timings (GD segment, host vs device rounding,
-ordering re-selection, population oracle evaluation) that show where
-the host-batched loop spends its between-segment time.
+plus per-stage numbers (GD segment, host vs device rounding, ordering
+re-selection, population oracle evaluation) read from the engine's own
+telemetry spans (`repro.obs`) rather than ad-hoc timers — the same
+spans a served request's ``/v1/trace`` exposes.
 
 The engine loop timings run with a stub latency model so the oracle
 (identical work in every engine, off the device critical path) does not
@@ -45,13 +46,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.rounding import round_population, round_population_device
+from repro.core.rounding import round_population_device
 from repro.core.search import (SearchConfig, dosa_search,
                                generate_start_points,
                                make_population_runner,
-                               orders_from_population,
-                               select_orderings_population_spec,
-                               theta_from_population, _cspec, _segment_lengths)
+                               theta_from_population, _cspec,
+                               _segment_lengths)
 from repro.workloads import dnn_zoo
 
 from .common import Row, Timer, save_json
@@ -65,64 +65,54 @@ def _stub_latency(mappings, workload):
 
 
 def _stage_timings(wl, cfg, cspec) -> dict:
-    """Micro-time the host-batched loop's stages at the engine's
-    population shape: one GD segment, host vs device rounding, ordering
-    re-selection, and the per-candidate oracle."""
+    """Per-stage numbers read off the telemetry spans the engine itself
+    emits: one warm host-batched search runs under an enabled tracer,
+    and each figure is the mean duration of that stage's
+    ``search.<stage>`` spans across segments — the same numbers
+    ``/v1/trace`` shows a served request.  The device-rounding
+    alternative (not on the host-batched path) is timed under its own
+    span at the same population shape, so every figure here is a span
+    duration, not an ad-hoc timer."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.model import infer_hw_population_spec
-    from repro.core.oracle import evaluate_workload
     from repro.core.search import build_f
+    from repro.obs import telemetry as obs
 
     run_segment, dims_j, strides_j, repeats_j = \
         make_population_runner(wl, cfg)
-    starts, _, _ = generate_start_points(wl, cfg)
-    dims = wl.dims_array()
-    strides = wl.strides_array().astype(float)
-    repeats = wl.repeats_array().astype(float)
-    theta_np = theta_from_population(starts, cspec.free_mask)
-    orders_np = orders_from_population(starts)
-    orders = jnp.asarray(orders_np)
+    tracer = obs.Tracer()
+    old = obs.get_tracer()
+    obs.set_tracer(tracer)
+    try:
+        # Warm at the caller's shapes, so the spans time steady-state
+        # execution of the real per-segment loop (real oracle).
+        dosa_search(wl, cfg, population=POPULATION, fused=False)
 
-    # warm every stage (run_segment donates theta: fresh buffer per call)
-    theta = run_segment(jnp.asarray(theta_np, dtype=jnp.float32), orders,
-                        n_steps=cfg.round_every)
-    f_cont = np.asarray(jax.vmap(
-        lambda th: build_f(th, dims_j, cspec.free_mask_j))(theta))
-    rounded = round_population(f_cont, orders_np, dims, spec=cspec)
-    round_population_device(f_cont, dims, spec=cspec)
-    from repro.core.mapping import stack_mappings
-    fs_pop = np.stack([stack_mappings(ms)[0] for ms in rounded])
-    hws = infer_hw_population_spec(cspec, jnp.asarray(fs_pop),
-                                   jnp.asarray(strides))
-    select_orderings_population_spec(cspec, fs_pop, strides, repeats, hws)
-
-    reps = 3
-    with Timer() as t_gd:
-        for _ in range(reps):
-            run_segment(jnp.asarray(theta_np, dtype=jnp.float32), orders,
-                        n_steps=cfg.round_every).block_until_ready()
-    with Timer() as t_rh:
-        for _ in range(reps):
-            round_population(f_cont, orders_np, dims, spec=cspec)
-    with Timer() as t_rd:
-        for _ in range(reps):
+        # Device rounding at the identical population shape.
+        starts, _, _ = generate_start_points(wl, cfg)
+        dims = wl.dims_array()
+        theta_np = theta_from_population(starts, cspec.free_mask)
+        f_cont = np.asarray(jax.vmap(
+            lambda th: build_f(th, dims_j, cspec.free_mask_j))(
+            jnp.asarray(theta_np, dtype=jnp.float32)))
+        round_population_device(f_cont, dims, spec=cspec)  # warm
+        with tracer.span("stage.rounding_device"):
             round_population_device(f_cont, dims, spec=cspec)
-    with Timer() as t_ord:
-        for _ in range(reps):
-            select_orderings_population_spec(cspec, fs_pop, strides,
-                                             repeats, hws)
-    with Timer() as t_orc:
-        for _ in range(reps):
-            for ms in rounded:
-                evaluate_workload(ms, wl.layers, spec=cspec)
+    finally:
+        obs.set_tracer(old)
+
+    def per_span(name: str) -> float:
+        n = len(tracer.spans_named(name))
+        return tracer.total_s(name) / max(n, 1)
+
     return {
-        "gd_segment_s": t_gd.seconds / reps,
-        "rounding_host_s": t_rh.seconds / reps,
-        "rounding_device_s": t_rd.seconds / reps,
-        "ordering_s": t_ord.seconds / reps,
-        "oracle_population_s": t_orc.seconds / reps,
+        "gd_segment_s": per_span("search.gd_segment"),
+        "rounding_host_s": per_span("search.rounding"),
+        "rounding_device_s": per_span("stage.rounding_device"),
+        "ordering_s": per_span("search.ordering"),
+        "oracle_population_s": per_span("search.oracle"),
+        "source": "telemetry",
     }
 
 
@@ -236,7 +226,7 @@ def run(scale: str = "quick") -> list[Row]:
         "fused engine must be seeded-identical to the host-batched "
         f"reference: {r_fused.best_edp} vs {r_host.best_edp}")
 
-    stages = _stage_timings(wl, cfg_stub, cspec)
+    stages = _stage_timings(wl, cfg, cspec)
     sweep = _population_sweep(wl, cfg, cspec)
     loop_speedup = t_host.seconds / t_fused.seconds
     payload = {
@@ -273,7 +263,8 @@ def run(scale: str = "quick") -> list[Row]:
             f"speedup_vs_host={loop_speedup:.2f}x "
             f"speedup_vs_seq={t_seq.seconds / t_fused.seconds:.2f}x"),
         Row("timing_stages", 0.0,
-            " ".join(f"{k}={v:.3f}" for k, v in stages.items())),
+            " ".join(f"{k}={v:.3f}" for k, v in stages.items()
+                     if isinstance(v, float)) + " source=telemetry"),
         Row("timing_end_to_end", t_fused_e2e.seconds * 1e6,
             f"fused_s={t_fused_e2e.seconds:.2f} "
             f"host_s={t_host_e2e.seconds:.2f} "

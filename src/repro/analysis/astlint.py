@@ -145,6 +145,8 @@ class _Linter(ast.NodeVisitor):
         if r.path_filters and not any(f in self.relpath
                                       for f in r.path_filters):
             return
+        if any(f in self.relpath for f in r.path_excludes):
+            return
         if self._suppressed(node, rule):
             return
         scope = self._qualname()
@@ -257,6 +259,9 @@ class _Linter(ast.NodeVisitor):
             self.report("ND201", node)
         elif chain in (f"time.{f}" for f in _WALLCLOCK_FUNCS):
             self.report("ND202", node)
+            # OB601 applies everywhere outside the telemetry spine
+            # (report() applies each rule's own path filters/excludes).
+            self.report("OB601", node)
 
         # expression-form jit over a named function: resolve params
         if _is_jit_expr(node.func) is False and _attr_chain(node.func) \

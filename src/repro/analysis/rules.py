@@ -14,6 +14,10 @@ Rule families:
   ``except`` that swallows is how preemptions, OOMs and real bugs
   disappear silently from a serving loop.
 * ``PY4xx`` — Python footguns (mutable default arguments).
+* ``OB6xx`` — observability hygiene: timing belongs on the telemetry
+  spine (`repro.obs`), not scattered ad-hoc clock reads — one clock,
+  injected, so spans/metrics stay consistent and engine code stays
+  deterministic under test.
 
 A rule fires as a `LintViolation` (see `astlint`).  Existing accepted
 patterns live in the checked-in baseline (``analysis_baseline.json``);
@@ -34,6 +38,10 @@ class Rule:
     # Restrict the rule to paths containing one of these fragments
     # (POSIX relpaths); empty tuple = everywhere.
     path_filters: tuple[str, ...] = ()
+    # Exempt paths containing one of these fragments — for rules that
+    # apply everywhere EXCEPT the module that owns the pattern (e.g.
+    # the telemetry clock).  Checked after path_filters.
+    path_excludes: tuple[str, ...] = ()
 
 
 RULES: dict[str, Rule] = {r.id: r for r in (
@@ -73,6 +81,14 @@ RULES: dict[str, Rule] = {r.id: r for r in (
         "an injected clock",
         path_filters=("src/repro/core/", "src/repro/serve/",
                       "src/repro/runtime/", "src/repro/sharding/")),
+    Rule(
+        "OB601", "wallclock-outside-obs",
+        "direct wall-clock call (time.time/perf_counter/monotonic) "
+        "outside the telemetry spine; time through "
+        "repro.obs.telemetry.default_clock / a tracer span (or the "
+        "injected clock_fn at serving boundaries) so every duration "
+        "shares one clock and shows up in /v1/metrics",
+        path_excludes=("src/repro/obs/", "benchmarks/")),
     Rule(
         "EX301", "exception-swallowed",
         "broad `except Exception`/bare `except` that neither re-raises "

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..launch.mesh import auto_pop_shards, make_pop_mesh
+from ..obs import telemetry as _obs
 from ..sharding.rules import get_shard_map, member_spec, segment_member_spec
 from .archspec import (ArchSpec, CompiledSpec, engine_group_key,
                        resolve_spec)
@@ -278,12 +279,20 @@ def make_fleet_runner(workload: Workload, spec, cfg: SearchConfig):
     if hit is not None:
         return hit
 
-    group = resolve_spec(spec)       # structural representative
-    loss = _fleet_loss_fn(workload, group, cfg)
-    pop_grad = jax.vmap(jax.value_and_grad(loss), in_axes=(0, 0, 0))
-    # run_segment(theta, orders, params, n_steps=...) — the shared Adam
-    # scan executor, with the per-member spec tables as the extra arg.
-    return _fleet_cache_put(key, make_segment_runner(pop_grad, cfg.lr))
+    def build():
+        group = resolve_spec(spec)   # structural representative
+        loss = _fleet_loss_fn(workload, group, cfg)
+        pop_grad = jax.vmap(jax.value_and_grad(loss),
+                            in_axes=(0, 0, 0))
+        # run_segment(theta, orders, params, n_steps=...) — the shared
+        # Adam scan executor, with per-member spec tables as extra arg.
+        return make_segment_runner(pop_grad, cfg.lr)
+
+    label = f"segment:{workload.name}"
+    value, build_s = _obs.profile_build(build, kind="segment",
+                                        cache="fleet", label=label)
+    _FLEET_ENGINE_CACHE.note_build_time(label, build_s)
+    return _fleet_cache_put(key, value)
 
 
 def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
@@ -303,6 +312,10 @@ def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
     hit = _FLEET_ENGINE_CACHE.get(key)
     if hit is not None:
         return hit
+    # Cache miss: the whole construction below runs under one
+    # engine.build span (closed just before the put at the end).
+    _build_token = _obs.start_build(kind="fused", cache="fleet",
+                                    label=f"fused:{workload.name}")
 
     group = resolve_spec(specs[0])
     cspecs = [resolve_spec(s) for s in specs]
@@ -413,6 +426,8 @@ def make_fused_fleet_runner(workload: Workload, specs: list[ArchSpec],
                       member_spec(orders.ndim - 1), sp_specs),
             out_specs=(ys_specs, best_specs))(theta, orders, sp_stack)
 
+    _FLEET_ENGINE_CACHE.note_build_time(f"fused:{workload.name}",
+                                        _obs.finish_build(_build_token))
     return _fleet_cache_put(key, run_fused)
 
 
@@ -649,32 +664,38 @@ def search_group_results(workload: Workload, specs: list[ArchSpec],
         n_full, rem = divmod(cfg.steps, cfg.round_every)
         n = cfg.n_start_points
         shards = auto_pop_shards(n, cfg.shards)
-        inv = None
-        if shards > 1:
-            b = n // shards
-            perm = np.array([s_i * n + i * b + j
-                             for i in range(shards)
-                             for s_i in range(len(specs))
-                             for j in range(b)])
-            inv = np.argsort(perm)
-            perm_j = jnp.asarray(perm)
-            theta, orders = theta[perm_j], orders[perm_j]
-            sp_stack = jax.tree_util.tree_map(lambda x: x[perm_j],
-                                              sp_stack)
-            theta, orders, sp_stack = _shard_member_tree(
-                (theta, orders, sp_stack), shards)
-        (f_seg, o_seg, _), _best = run_fused(
-            theta, orders, sp_stack, n_full=n_full, rem=rem,
-            seg_len=cfg.round_every, shards=shards)
-        f_seg = np.asarray(f_seg, dtype=float)
-        o_seg = np.asarray(o_seg)
-        if inv is not None:
-            f_seg, o_seg = f_seg[:, inv], o_seg[:, inv]
+        tracer = _obs.get_tracer()
+        with tracer.span("fleet.fused_dispatch", members=len(params),
+                         specs=len(specs), shards=shards):
+            inv = None
+            if shards > 1:
+                b = n // shards
+                perm = np.array([s_i * n + i * b + j
+                                 for i in range(shards)
+                                 for s_i in range(len(specs))
+                                 for j in range(b)])
+                inv = np.argsort(perm)
+                perm_j = jnp.asarray(perm)
+                theta, orders = theta[perm_j], orders[perm_j]
+                sp_stack = jax.tree_util.tree_map(lambda x: x[perm_j],
+                                                  sp_stack)
+                theta, orders, sp_stack = _shard_member_tree(
+                    (theta, orders, sp_stack), shards)
+            (f_seg, o_seg, _), _best = run_fused(
+                theta, orders, sp_stack, n_full=n_full, rem=rem,
+                seg_len=cfg.round_every, shards=shards)
+        with tracer.span("fleet.readback"):
+            f_seg = np.asarray(f_seg, dtype=float)
+            o_seg = np.asarray(o_seg)
+            if inv is not None:
+                f_seg, o_seg = f_seg[:, inv], o_seg[:, inv]
         for s, n_steps in enumerate(seg_lens):
-            for cspec, rec, (a, b) in zip(cspecs, recs, spans):
-                rec.count(n_steps * (b - a))
-                for p in range(a, b):
-                    rec.record(unstack_mappings(f_seg[s, p], o_seg[s, p]))
+            with tracer.span("fleet.oracle", segment=s):
+                for cspec, rec, (a, b) in zip(cspecs, recs, spans):
+                    rec.count(n_steps * (b - a))
+                    for p in range(a, b):
+                        rec.record(
+                            unstack_mappings(f_seg[s, p], o_seg[s, p]))
     else:
         for n_steps in seg_lens:
             theta = run_segment(theta, orders, sp_stack, n_steps=n_steps)

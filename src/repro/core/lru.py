@@ -32,6 +32,13 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Per-entry build latency (label -> seconds), fed by the
+        # engine.build telemetry spans via `note_build_time` — the cache
+        # itself never reads a clock (ND202/OB601).  Bounded separately
+        # from the data so evicted-then-rebuilt entries keep history.
+        self._build_s: OrderedDict = OrderedDict()
+        self.build_count = 0
+        self.build_seconds_total = 0.0
 
     def __len__(self) -> int:
         return len(self._data)
@@ -88,10 +95,25 @@ class LRUCache:
         the cache while iterating)."""
         return list(self._data.keys())
 
+    def note_build_time(self, label: str, seconds: float) -> None:
+        """Record one entry build's latency under a human-readable
+        label (timed by the caller's telemetry span).  Labels are
+        bounded at ``4 * maxsize`` (oldest dropped) so a long-lived
+        server can't grow this without limit."""
+        self._build_s[label] = float(seconds)
+        self._build_s.move_to_end(label)
+        while len(self._build_s) > 4 * self.maxsize:
+            self._build_s.popitem(last=False)
+        self.build_count += 1
+        self.build_seconds_total += float(seconds)
+
     def clear(self, reset_stats: bool = False) -> None:
         self._data.clear()
         if reset_stats:
             self.hits = self.misses = self.evictions = 0
+            self._build_s.clear()
+            self.build_count = 0
+            self.build_seconds_total = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -101,4 +123,7 @@ class LRUCache:
     def stats(self) -> dict:
         return {"size": len(self._data), "maxsize": self.maxsize,
                 "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "hit_rate": self.hit_rate,
+                "build_count": self.build_count,
+                "build_seconds_total": self.build_seconds_total,
+                "build_seconds": dict(self._build_s)}

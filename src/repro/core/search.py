@@ -99,6 +99,7 @@ from .problem import Workload
 from .rounding import (round_all, round_population, rounding_tables,
                        _round_population_core)
 from ..launch.mesh import auto_pop_shards, make_pop_mesh
+from ..obs import telemetry as _obs
 from ..sharding.rules import (POP_AXIS, get_shard_map, member_spec,
                               segment_member_spec)
 
@@ -372,8 +373,19 @@ def _engine_key(workload: Workload, cfg: SearchConfig, kind: str):
 
 
 def _cached_engine(workload: Workload, cfg: SearchConfig, kind: str, build):
-    return _ENGINE_CACHE.get_or_build(_engine_key(workload, cfg, kind),
-                                      build)
+    key = _engine_key(workload, cfg, kind)
+    hit = _ENGINE_CACHE.get(key, None)
+    if hit is not None:
+        return hit
+    # Cache miss: build under an `engine.build` span (obs.telemetry
+    # owns the clock, so this stays ND202/OB601-clean) and keep the
+    # per-entry build time on the cache for `engine_cache_stats()`.
+    label = f"{kind}:{workload.name}"
+    value, build_s = _obs.profile_build(build, kind=kind,
+                                        cache="search", label=label)
+    _ENGINE_CACHE.put(key, value)
+    _ENGINE_CACHE.note_build_time(label, build_s)
+    return value
 
 
 def engine_cache_stats() -> dict:
@@ -978,31 +990,40 @@ def _dosa_search_batched(workload: Workload, cfg: SearchConfig,
                             dtype=jnp.float32)
         orders = jnp.asarray(orders_from_population(chunk))
 
-        for n_steps in segments:
-            theta = run_segment(theta, orders, n_steps=n_steps)
-            rec.count(n_steps * n_real)  # one sample per GD step per start
+        tracer = _obs.get_tracer()
+        for seg, n_steps in enumerate(segments):
+            with tracer.span("search.gd_segment", segment=seg,
+                             n_steps=n_steps, population=P):
+                theta = run_segment(theta, orders, n_steps=n_steps)
+                rec.count(n_steps * n_real)  # one sample per GD step
 
-            f_cont = np.asarray(jax.vmap(
-                lambda th: build_f(th, dims_j, free_mask_j))(theta))
-            rounded_pop = round_population(f_cont, np.asarray(orders), dims,
-                                           pe_cap=pe_cap, spec=cspec)
+            with tracer.span("search.rounding", segment=seg):
+                f_cont = np.asarray(jax.vmap(
+                    lambda th: build_f(th, dims_j, free_mask_j))(theta))
+                rounded_pop = round_population(
+                    f_cont, np.asarray(orders), dims,
+                    pe_cap=pe_cap, spec=cspec)
             if cfg.ordering_mode in ("iterative", "softmax"):
-                fs_pop = np.stack(
-                    [stack_mappings(ms)[0] for ms in rounded_pop])
-                if hw_fixed is not None:
-                    hws = jax.tree_util.tree_map(
-                        lambda x: jnp.broadcast_to(x, (P,) + jnp.shape(x)),
-                        hw_fixed)
-                else:
-                    hws = infer_hw_population_spec(
-                        cspec, jnp.asarray(fs_pop), jnp.asarray(strides))
-                new_orders = select_orderings_population_spec(
-                    cspec, fs_pop, strides, repeats, hws)
-                for ms, no in zip(rounded_pop, new_orders):
-                    for mp, o in zip(ms, no):
-                        mp.order = o
-            for ms in rounded_pop[:n_real]:
-                rec.record(ms)
+                with tracer.span("search.ordering", segment=seg):
+                    fs_pop = np.stack(
+                        [stack_mappings(ms)[0] for ms in rounded_pop])
+                    if hw_fixed is not None:
+                        hws = jax.tree_util.tree_map(
+                            lambda x: jnp.broadcast_to(
+                                x, (P,) + jnp.shape(x)),
+                            hw_fixed)
+                    else:
+                        hws = infer_hw_population_spec(
+                            cspec, jnp.asarray(fs_pop),
+                            jnp.asarray(strides))
+                    new_orders = select_orderings_population_spec(
+                        cspec, fs_pop, strides, repeats, hws)
+                    for ms, no in zip(rounded_pop, new_orders):
+                        for mp, o in zip(ms, no):
+                            mp.order = o
+            with tracer.span("search.oracle", segment=seg):
+                for ms in rounded_pop[:n_real]:
+                    rec.record(ms)
             # Continue GD from the rounded points, fresh momentum.
             theta = jnp.asarray(
                 theta_from_population(rounded_pop, cspec.free_mask),
@@ -1042,13 +1063,15 @@ def _dosa_search_fused(workload: Workload, cfg: SearchConfig,
     # (host protocol), or deferred to per-chunk device kernels.
     starts = []
     if not device_seeded:
-        rng = np.random.default_rng(cfg.seed)
-        best_start_edp = float("inf")
-        for _ in range(cfg.n_start_points):
-            mappings, edp0, best_start_edp = _generate_start_point(
-                workload, cfg, rng, best_start_edp, rec)
-            rec.best.start_edps.append(edp0)
-            starts.append(mappings)
+        with _obs.get_tracer().span("search.starts",
+                                    n=cfg.n_start_points):
+            rng = np.random.default_rng(cfg.seed)
+            best_start_edp = float("inf")
+            for _ in range(cfg.n_start_points):
+                mappings, edp0, best_start_edp = _generate_start_point(
+                    workload, cfg, rng, best_start_edp, rec)
+                rec.best.start_edps.append(edp0)
+                starts.append(mappings)
 
     seg_lens = _segment_lengths(cfg.steps, cfg.round_every)
     n_full, rem = divmod(cfg.steps, cfg.round_every)
@@ -1084,18 +1107,28 @@ def _dosa_search_fused(workload: Workload, cfg: SearchConfig,
         if not seg_lens:
             continue
 
-        theta, orders = shard_population(theta, orders, shards)
-        (f_seg, o_seg, _), _best = run_fused(
-            theta, orders, n_full=n_full, rem=rem,
-            seg_len=cfg.round_every, shards=shards)
+        tracer = _obs.get_tracer()
+        # Async submission of the one fused program (GD + rounding +
+        # ordering for every segment); the device work drains inside
+        # the readback span below, where np.asarray blocks.
+        with tracer.span("search.fused_dispatch", chunk=lo,
+                         population=population, shards=shards,
+                         n_full=n_full, rem=rem):
+            theta, orders = shard_population(theta, orders, shards)
+            (f_seg, o_seg, _), _best = run_fused(
+                theta, orders, n_full=n_full, rem=rem,
+                seg_len=cfg.round_every, shards=shards)
 
         # ---- final read-back + oracle replay (host-batched order);
         # gathered across shards once here, padded members skipped.
-        f_seg = np.asarray(f_seg, dtype=float)     # (S, P, L, 2, nl, 7)
-        o_seg = np.asarray(o_seg)                  # (S, P, L, n_levels)
+        with tracer.span("search.readback", chunk=lo):
+            f_seg = np.asarray(f_seg, dtype=float)  # (S, P, L, 2, nl, 7)
+            o_seg = np.asarray(o_seg)               # (S, P, L, n_levels)
         for s, n_steps in enumerate(seg_lens):
-            rec.count(n_steps * n_real)  # one sample per GD step per start
-            for p in range(n_real):
-                rec.record(unstack_mappings(f_seg[s, p], o_seg[s, p]))
+            with tracer.span("search.oracle", segment=s, chunk=lo):
+                rec.count(n_steps * n_real)  # one sample per GD step
+                for p in range(n_real):
+                    rec.record(
+                        unstack_mappings(f_seg[s, p], o_seg[s, p]))
 
     return rec.finish()

@@ -238,7 +238,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     (XLA cost_analysis counts a while-loop body once regardless of trip
     count, so scanned stacks must be extrapolated)."""
     import dataclasses as dc
-    import time
+
+    from ..obs import telemetry as _obs
 
     from ..sharding.rules import set_parallelism
     set_parallelism(parallelism)
@@ -266,13 +267,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # Shardings are passed explicitly below either way.
     _mesh_ctx = getattr(jax.sharding, "set_mesh", lambda m: m)
     with _mesh_ctx(mesh):
-        t0 = time.time()
-        lowered = _lower_cell(cfg, shape, mesh, mode, unroll=False,
-                              train_overrides=train_overrides)
-        res.lower_s = time.time() - t0
-        t0 = time.time()
-        compiled = lowered.compile()
-        res.compile_s = time.time() - t0
+        # Trace/lower/compile timed as engine.build-family telemetry
+        # spans (visible when a tracer is enabled) on the shared clock.
+        tracer = _obs.get_tracer()
+        t0 = _obs.default_clock()
+        with tracer.span("engine.lower", arch=arch, shape=shape_name):
+            lowered = _lower_cell(cfg, shape, mesh, mode, unroll=False,
+                                  train_overrides=train_overrides)
+        t1 = _obs.default_clock()
+        res.lower_s = t1 - t0
+        with tracer.span("engine.compile", arch=arch, shape=shape_name):
+            compiled = lowered.compile()
+        res.compile_s = _obs.default_clock() - t1
         res.memory = _mem_analysis(compiled)
         res.flops, res.bytes_accessed, res.collectives = \
             _analyze(compiled)

@@ -6,7 +6,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +13,7 @@ import numpy as np
 
 from ..configs import get_config
 from ..models.lm import build_model
+from ..obs import telemetry as _obs
 from ..serve.serve_step import make_serve_step
 
 
@@ -47,14 +47,14 @@ def main() -> None:
 
     tok = prompts[:, :1]
     out = [tok]
-    t0 = time.perf_counter()
+    t0 = _obs.default_clock()
     for pos in range(max_seq - 1):
         nxt, cache = step_fn(params, cache, tok, jnp.int32(pos))
         tok = (prompts[:, pos + 1:pos + 2]
                if pos + 1 < args.prompt_len else nxt)
         out.append(tok)
     seq = jnp.concatenate(out, axis=1)
-    dt = time.perf_counter() - t0
+    dt = _obs.default_clock() - t0
     print(f"[serve] {args.batch} seqs x {max_seq} tokens in {dt:.1f}s "
           f"({args.batch*max_seq/dt:.1f} tok/s)")
     print("[serve] sample:", np.asarray(seq[0, :32]).tolist())

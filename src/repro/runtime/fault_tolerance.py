@@ -22,7 +22,6 @@ tests/test_fault_tolerance.py):
 from __future__ import annotations
 
 import dataclasses
-import time
 from pathlib import Path
 from typing import Callable
 
@@ -31,6 +30,7 @@ import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
 from ..data.pipeline import DataConfig, make_batch
+from ..obs import telemetry as _obs
 from . import faults
 
 
@@ -80,11 +80,11 @@ def train_with_recovery(train_step: Callable, params, opt_state,
                 fault_hook(step)
             batch = make_batch(data_cfg, step)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-            t0 = time.perf_counter()
+            t0 = _obs.default_clock()
             params, opt_state, metrics = train_step(params, opt_state,
                                                     batch)
             loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = _obs.default_clock() - t0
             if not np.isfinite(loss):
                 raise FloatingPointError(f"non-finite loss at {step}")
             durations.append(dt)

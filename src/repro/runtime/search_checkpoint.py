@@ -37,6 +37,20 @@ from ..checkpoint import checkpoint as ckpt
 from ..core.hw_infer import minimal_hw_for
 from ..core.lru import LRUCache
 from ..core.mapping import stack_mappings, unstack_mappings
+from ..obs import telemetry as _obs
+
+
+def _ckpt_metrics(op: str, n_bytes: int, seconds: float) -> None:
+    """Byte + latency accounting for one checkpoint operation, into
+    the global registry (rendered at ``/v1/metrics``)."""
+    m = _obs.get_metrics()
+    m.counter("checkpoint_ops_total", "checkpoint operations",
+              ("op",)).inc(op=op)
+    m.counter("checkpoint_bytes_total", "bytes written/read/freed "
+              "by checkpoint operations", ("op",)).inc(max(n_bytes, 0),
+                                                       op=op)
+    m.histogram("checkpoint_seconds", "checkpoint operation latency",
+                ("op",)).observe(seconds, op=op)
 
 # What a torn/partial/corrupt checkpoint read raises: truncated npz
 # (BadZipFile/OSError/EOFError), mangled meta.json (JSONDecodeError is
@@ -107,9 +121,16 @@ def save_task(root: str | Path, task_id: str, seg_idx: int,
     state = {"theta": np.asarray(theta),
              "orders": np.asarray(orders),
              "recs": {str(i): rs for i, rs in enumerate(rec_states)}}
-    ckpt.save(task_dir(root, task_id), seg_idx, state,
-              extra_meta={"task_id": task_id,
-                          "n_requests": len(rec_states)})
+    d = task_dir(root, task_id)
+    t0 = _obs.default_clock()
+    with _obs.get_tracer().span("checkpoint.save", task_id=task_id,
+                                seg_idx=seg_idx) as sp:
+        ckpt.save(d, seg_idx, state,
+                  extra_meta={"task_id": task_id,
+                              "n_requests": len(rec_states)})
+        n_bytes = dir_bytes(d / f"step_{seg_idx}")
+        sp.set(bytes=n_bytes)
+    _ckpt_metrics("save", n_bytes, _obs.default_clock() - t0)
 
 
 def _step_ids(d: Path) -> list[int]:
@@ -138,14 +159,26 @@ def restore_task(root: str | Path, task_id: str
     the serving layer's replay is deterministic, so resuming from an
     older segment reaches a bit-identical final state."""
     d = task_dir(root, task_id)
-    for step in _step_ids(d):
-        try:
-            seg_idx, state = ckpt.restore(d, step)
-            rec_states = list(state["recs"])
-            return seg_idx, np.asarray(state["theta"]), \
-                np.asarray(state["orders"]), rec_states
-        except CORRUPT_CHECKPOINT_FAULTS:
-            continue   # torn/partial: fall back to the previous step
+    t0 = _obs.default_clock()
+    with _obs.get_tracer().span("checkpoint.restore",
+                                task_id=task_id) as sp:
+        for step in _step_ids(d):
+            try:
+                seg_idx, state = ckpt.restore(d, step)
+                rec_states = list(state["recs"])
+                n_bytes = dir_bytes(d / f"step_{step}")
+                sp.set(bytes=n_bytes, step=step)
+                _ckpt_metrics("restore", n_bytes,
+                              _obs.default_clock() - t0)
+                return seg_idx, np.asarray(state["theta"]), \
+                    np.asarray(state["orders"]), rec_states
+            except CORRUPT_CHECKPOINT_FAULTS:
+                sp.event("torn_checkpoint", step=step)
+                _obs.get_metrics().counter(
+                    "checkpoint_torn_total",
+                    "corrupt/torn checkpoint steps skipped on restore"
+                ).inc()
+                continue   # torn/partial: fall back to previous step
     return None
 
 
@@ -198,11 +231,13 @@ class CheckpointGC:
 
     def remove(self, task_id: str) -> int:
         """Drop a completed task's checkpoints (drain-time GC)."""
+        t0 = _obs.default_clock()
         freed = delete_task(self.root, task_id)
         self._lru.discard(task_id)
         if freed:
             self.removed_tasks += 1
             self.bytes_freed += freed
+            _ckpt_metrics("gc", freed, _obs.default_clock() - t0)
         return freed
 
     def total_bytes(self) -> int:
@@ -214,6 +249,7 @@ class CheckpointGC:
         if self.max_bytes is None:
             return []
         swept = []
+        t0 = _obs.default_clock()
         while len(self._lru) > 1 and self.total_bytes() > self.max_bytes:
             item = self._lru.pop_lru()
             if item is None:
@@ -223,6 +259,8 @@ class CheckpointGC:
             if freed:
                 self.removed_tasks += 1
                 self.bytes_freed += freed
+                _ckpt_metrics("gc", freed, _obs.default_clock() - t0)
+                t0 = _obs.default_clock()
             swept.append(task_id)
         return swept
 

@@ -83,7 +83,7 @@ from ..api import SearchOutcome, SearchRequest
 from ..core.archspec import (GEMMINI_SPEC, bucket_workload,
                              engine_group_key, resolve_spec)
 from ..core.fleet import _TRACED_CFG_FIELDS, search_group_results
-from ..core.mapping import unstack_mappings
+from ..core.mapping import stack_mappings, unstack_mappings
 from ..core.oracle import evaluate_workload
 from ..core.problem import Workload
 from ..core.search import (SearchConfig, _Recorder, _generate_start_point,
@@ -92,6 +92,8 @@ from ..core.search import (SearchConfig, _Recorder, _generate_start_point,
                            shard_population, theta_from_population)
 from ..launch.mesh import auto_pop_shards
 from ..core.fleet import fleet_engine_cache_stats
+from ..obs import telemetry as _obs
+from ..obs.history import HistoryRecorder
 from ..runtime import faults
 from ..runtime import search_checkpoint as sckpt
 
@@ -115,6 +117,10 @@ class ServiceConfig:
     # wall clock directly); tests inject fakes for determinism.
     clock_fn: Callable[[], float] = time.monotonic
     sleep_fn: Callable[[float], None] = time.sleep
+    # Observability: request-lifecycle span budget and the bound on the
+    # npz-backed search-history store (learned-seeding training rows).
+    trace_max_spans: int = 100_000
+    history_max_rows: int = 4096
 
     def retry_policy(self) -> faults.RetryPolicy:
         return faults.RetryPolicy(max_retries=self.max_restarts,
@@ -223,6 +229,16 @@ class _BatchTask:
         self.finalized: dict[str, SearchOutcome] = {}   # timed-out rids
         self.checkpoint_hook: Callable | None = None
         self._force_shards1 = False
+        # Observability taps, wired by the service at registration:
+        # trace_event(name, **attrs) fans a fault/degrade event out to
+        # every member request's root span; history records one row per
+        # (request, segment) boundary.
+        self.trace_event: Callable | None = None
+        self.history: HistoryRecorder | None = None
+
+    def _emit(self, name: str, **attrs) -> None:
+        if self.trace_event is not None:
+            self.trace_event(name, **attrs)
 
     @property
     def restarts(self) -> int:
@@ -363,20 +379,28 @@ class _BatchTask:
                     # degrade to the single-shard engine and continue
                     self._force_shards1 = True
                     self.degraded.add("shard_fallback")
+                    self._emit("degrade", mode="shard_fallback")
                     self._rollback()
                     continue
                 if isinstance(exc, faults.SurrogateFault) \
                         and self._strip_surrogate():
+                    self._emit("degrade", mode="surrogate_fallback")
                     continue
                 action, delay = self.retry.next_action(exc)
                 if action == faults.RETRY:
+                    self._emit("retry",
+                               fault_class=faults.classify(exc),
+                               type=type(exc).__name__,
+                               retries=self.retry.retries)
                     if delay > 0.0:
+                        self._emit("backoff", delay_s=delay)
                         self.svc_cfg.sleep_fn(delay)
                     self._rollback()
                     continue
                 # poison or exhausted budget: surrogate configs get one
                 # analytical-fallback attempt before giving up
                 if self._strip_surrogate():
+                    self._emit("degrade", mode="surrogate_fallback")
                     continue
                 if action == faults.QUARANTINE:
                     if len(self.requests) > 1:
@@ -448,9 +472,29 @@ class _BatchTask:
                                            ).astype(np.float32)
         self.orders = orders_from_population(rounded)
         self.seg_done += 1
+        self._record_history()
         if (self.seg_done % self.svc_cfg.checkpoint_every == 0
                 or self.seg_done >= len(self.seg_lens)):
             self._checkpoint()
+
+    def _record_history(self) -> None:
+        """One search-history row per live request at this segment
+        boundary: the running best EDP + its rounded mapping — the
+        learned-seeding training data (`obs.history`)."""
+        if self.history is None:
+            return
+        spec_fp = getattr(self.cspec, "name", "spec")
+        for req, rec in zip(self.requests, self.recs):
+            if req.request_id in self.finalized:
+                continue
+            best = rec.best
+            if not best.best_mappings:
+                continue
+            fs, ords = stack_mappings(best.best_mappings)
+            self.history.record(
+                spec=spec_fp, workload=self.workload.name,
+                segment=self.seg_done, best_edp=best.best_edp,
+                factors=fs, orders=ords, request_id=req.request_id)
 
     # -- timeouts ----------------------------------------------------------
 
@@ -513,6 +557,12 @@ class _GroupTask:
         self.degraded: set[str] = set()
         self.finalized: dict[str, SearchOutcome] = {}
         self.checkpoint_hook: Callable | None = None
+        self.trace_event: Callable | None = None
+        self.history: HistoryRecorder | None = None
+
+    def _emit(self, name: str, **attrs) -> None:
+        if self.trace_event is not None:
+            self.trace_event(name, **attrs)
 
     def advance(self, fault_hook: Callable | None = None
                 ) -> list[ProgressEvent]:
@@ -533,7 +583,12 @@ class _GroupTask:
             except Exception as exc:   # classified; fatal re-raised
                 action, delay = self.retry.next_action(exc)
                 if action == faults.RETRY:
+                    self._emit("retry",
+                               fault_class=faults.classify(exc),
+                               type=type(exc).__name__,
+                               retries=self.retry.retries)
                     if delay > 0.0:
+                        self._emit("backoff", delay_s=delay)
                         self.svc_cfg.sleep_fn(delay)
                     continue   # stateless: a full rerun IS the rollback
                 if action == faults.QUARANTINE:
@@ -544,6 +599,17 @@ class _GroupTask:
         self._results = results
         self.seg_done = 1
         self.done = True
+        if self.history is not None:
+            for req, sr in zip(self.requests, results):
+                mappings = getattr(sr, "best_mappings", None)
+                if not mappings:
+                    continue
+                fs, ords = stack_mappings(mappings)
+                self.history.record(
+                    spec=getattr(_spec_of(req.config), "name", "spec"),
+                    workload=self.workload.name, segment=1,
+                    best_edp=sr.best_edp, factors=fs, orders=ords,
+                    request_id=req.request_id)
         events = []
         for req, sr in zip(self.requests, results):
             if req.request_id in self.finalized:
@@ -597,8 +663,6 @@ class CoSearchService:
         self._events: dict[str, list[ProgressEvent]] = {}
         self._outcomes: dict[str, SearchOutcome] = {}
         self._frontier: dict[str, tuple] = {}   # request_id -> (E, L)
-        self._n_batches = 0
-        self._n_grouped = 0
         self.fault_hook: Callable | None = None
         self.checkpoint_hook: Callable | None = None
         # dedup + scheduling state
@@ -609,14 +673,52 @@ class CoSearchService:
         self._credits: dict[str, float] = {}    # task_id -> WRR credit
         self._task_order: dict[str, int] = {}   # task_id -> creation idx
         self._task_seq = 0
-        # fault counters (folded from tasks as they retire)
-        self._dedup_hits = 0
-        self._quarantined = 0
-        self._batch_splits = 0
-        self._timeouts = 0
-        self._degraded_requests = 0
-        self._retired_retries = 0
-        self._retired_backoff_s = 0.0
+        # Observability spine: the service owns one tracer (request
+        # lifecycle spans on the *injected* clock) plus one metrics
+        # registry — every count `stats()` reports lives in the
+        # registry, not in hand-maintained ints, so `/v1/metrics` and
+        # `stats()` can never disagree.
+        self.tracer = _obs.Tracer(clock=self.cfg.clock_fn,
+                                  max_spans=self.cfg.trace_max_spans)
+        self.metrics = _obs.MetricsRegistry()
+        self.history = HistoryRecorder(max_rows=self.cfg.history_max_rows)
+        m = self.metrics
+        self._c_submitted = m.counter(
+            "serve_requests_submitted_total", "requests accepted")
+        self._c_completed = m.counter(
+            "serve_requests_completed_total",
+            "requests finalized, by outcome status", ("status",))
+        self._c_segments = m.counter(
+            "serve_segments_total", "rounding segments advanced")
+        self._c_batches = m.counter(
+            "serve_batches_total", "tasks formed, by engine kind",
+            ("kind",))
+        self._c_dedup = m.counter(
+            "serve_dedup_hits_total", "requests deduped onto an "
+            "in-flight fingerprint")
+        self._c_quarantined = m.counter(
+            "serve_quarantined_total", "requests quarantined as poison")
+        self._c_splits = m.counter(
+            "serve_batch_splits_total", "poison batch splits")
+        self._c_timeouts = m.counter(
+            "serve_timeouts_total", "deadline/segment-budget expiries")
+        self._c_degraded = m.counter(
+            "serve_degraded_requests_total", "requests answered on a "
+            "degraded path")
+        self._c_retries = m.counter(
+            "serve_retries_total", "transient-fault retries")
+        self._c_backoff = m.counter(
+            "serve_backoff_seconds_total", "backoff slept before "
+            "retries")
+        self._c_fault_events = m.counter(
+            "serve_fault_events_total", "fault-path span events, by "
+            "kind", ("event",))
+        self._h_request = m.histogram(
+            "serve_request_seconds", "submit-to-finalize latency")
+        # request-lifecycle span bookkeeping (rid -> span ids)
+        self._root_span: dict[str, int] = {}
+        self._queue_span: dict[str, int] = {}
+        self._submit_t: dict[str, float] = {}
         self._gc = None
         if self.cfg.checkpoint_dir is not None:
             self._gc = sckpt.CheckpointGC(self.cfg.checkpoint_dir,
@@ -640,7 +742,11 @@ class CoSearchService:
         fp = req.fingerprint()
         canon = self._fp_to_rid.get(fp)
         if canon is not None:
-            self._dedup_hits += 1
+            self._c_dedup.inc()
+            root = self._root_span.get(canon)
+            if root is not None:
+                self.tracer.add_event(root, "dedup_hit",
+                                      alias=req.request_id)
             if req.request_id != canon:
                 self._aliases[req.request_id] = canon
             return req.request_id
@@ -651,6 +757,18 @@ class CoSearchService:
                 self.cfg.clock_fn, req.deadline_s)
         self._pending.append(req)
         self._events.setdefault(req.request_id, [])
+        # request lifecycle trace: root span (open until finalize) with
+        # a queue_wait child that closes at batch join
+        self._c_submitted.inc()
+        rid = req.request_id
+        root = self.tracer.start_span(
+            "request", request_id=rid,
+            workload=req.workload.name, priority=req.priority)
+        self.tracer.add_event(root, "submitted")
+        self._root_span[rid] = root
+        self._queue_span[rid] = self.tracer.start_span(
+            "queue_wait", parent_id=root)
+        self._submit_t[rid] = self.cfg.clock_fn()
         return req.request_id
 
     def _rid(self, request_id: str) -> str:
@@ -669,12 +787,39 @@ class CoSearchService:
                  id(cfg.surrogate) if cfg.surrogate is not None else None)
         return (engine_group_key(_spec_of(cfg)), wl, traced, extra)
 
+    def _trace_event_hook(self, task) -> Callable:
+        """Fan a task fault/degrade event out to every member request's
+        root span (+ the fault-event counter family)."""
+        def emit(name: str, **attrs) -> None:
+            self._c_fault_events.inc(event=name)
+            if name == "retry":
+                self._c_retries.inc()
+            elif name == "backoff":
+                self._c_backoff.inc(attrs.get("delay_s", 0.0))
+            for r in task.requests:
+                root = self._root_span.get(r.request_id)
+                if root is not None:
+                    self.tracer.add_event(root, name, **attrs)
+        return emit
+
     def _register_task(self, task) -> None:
         task.checkpoint_hook = self.checkpoint_hook
+        task.trace_event = self._trace_event_hook(task)
+        task.history = self.history
         self._tasks.append(task)
         self._credits[task.task_id] = 0.0
         self._task_order[task.task_id] = self._task_seq
         self._task_seq += 1
+        for r in task.requests:
+            rid = r.request_id
+            q = self._queue_span.pop(rid, None)
+            if q is not None:
+                self.tracer.end_span(q)
+            root = self._root_span.get(rid)
+            if root is not None:
+                self.tracer.add_event(root, "batch_join",
+                                      task_id=task.task_id,
+                                      batch_size=len(task.requests))
 
     def _form_batches(self) -> None:
         groups: dict[tuple, list[SearchRequest]] = {}
@@ -688,10 +833,10 @@ class CoSearchService:
                 specs = {_spec_of(r.config) for r in chunk}
                 if len(specs) == 1:
                     self._register_task(_BatchTask(self.cfg, wl, chunk))
+                    self._c_batches.inc(kind="fused")
                 else:
                     self._register_task(_GroupTask(self.cfg, wl, chunk))
-                    self._n_grouped += 1
-                self._n_batches += 1
+                    self._c_batches.inc(kind="group")
 
     # -- scheduling --------------------------------------------------------
 
@@ -737,8 +882,12 @@ class CoSearchService:
                     continue
                 out = task.expire_request(rid, reason)
                 if out is not None:
-                    self._timeouts += 1
-                    self._outcomes[rid] = out
+                    self._c_timeouts.inc()
+                    root = self._root_span.get(rid)
+                    if root is not None:
+                        self.tracer.add_event(root, "timeout",
+                                              reason=reason)
+                    self._finalize(rid, out)
             if task.done:
                 self._retire(task)
 
@@ -768,20 +917,26 @@ class CoSearchService:
         if task is None:
             return []
         task.checkpoint_hook = self.checkpoint_hook
+        seg_spans = self._open_segment_spans(task)
         try:
             events = task.advance(self.fault_hook)
         except _SplitBatch:
+            self._close_segment_spans(seg_spans, None, "split")
             self._split(task)
             return []
         except _QuarantineTask as q:
+            self._close_segment_spans(seg_spans, None, "quarantine")
             self._quarantine(task, q.record)
             return []
         except Exception as exc:
+            self._close_segment_spans(seg_spans, None, "error")
             if not contain_fatal:
                 raise
             self._quarantine(task, faults.fault_record(
                 exc, faults.classify(exc), task.retry.retries))
             return []
+        self._close_segment_spans(seg_spans, events, "ok")
+        self._c_segments.inc()
         for ev in events:
             self._events.setdefault(ev.request_id, []).append(ev)
             if ev.best_point is not None:
@@ -793,9 +948,8 @@ class CoSearchService:
             for req, out in task.final_outcomes():
                 if out.request_id in self._outcomes:
                     continue
-                self._outcomes[out.request_id] = out
-                if out.degraded:
-                    self._degraded_requests += 1
+                self._finalize(out.request_id, out,
+                               count_degraded=True)
                 if out.request_id not in self._frontier \
                         and out.result is not None:
                     pt = _point_of(task.workload, req.config, out.result)
@@ -804,11 +958,54 @@ class CoSearchService:
             self._retire(task)
         return events
 
+    def _open_segment_spans(self, task) -> dict[str, int]:
+        """One per-segment child span under each live member request's
+        root — the batch advances together, so siblings share the
+        interval but each tree stays self-contained."""
+        spans = {}
+        for r in task.requests:
+            rid = r.request_id
+            if rid in self._outcomes or rid in task.finalized:
+                continue
+            spans[rid] = self.tracer.start_span(
+                "segment", parent_id=self._root_span.get(rid),
+                segment=task.seg_done, task_id=task.task_id)
+        return spans
+
+    def _close_segment_spans(self, spans: dict[str, int],
+                             events: list[ProgressEvent] | None,
+                             outcome: str) -> None:
+        by_rid = {ev.request_id: ev for ev in (events or [])}
+        for rid, sid in spans.items():
+            ev = by_rid.get(rid)
+            if ev is not None:
+                self.tracer.end_span(sid, outcome=outcome,
+                                     best_edp=ev.best_edp,
+                                     n_evals=ev.n_evals,
+                                     improved=ev.improved)
+            else:
+                self.tracer.end_span(sid, outcome=outcome)
+
+    def _finalize(self, rid: str, out: SearchOutcome,
+                  count_degraded: bool = False) -> None:
+        """Record an outcome once: registry counters, request-latency
+        histogram, and the root span's drain event + close."""
+        self._outcomes[rid] = out
+        self._c_completed.inc(status=out.status)
+        if count_degraded and out.degraded:
+            self._c_degraded.inc()
+        root = self._root_span.get(rid)
+        if root is not None:
+            self.tracer.add_event(root, "drain", status=out.status)
+            self.tracer.end_span(root, status=out.status)
+        t0 = self._submit_t.pop(rid, None)
+        if t0 is not None:
+            self._h_request.observe(self.cfg.clock_fn() - t0)
+
     def _retire(self, task) -> None:
-        """Fold a finished task's fault counters into the service totals
-        and garbage-collect its checkpoints."""
-        self._retired_retries += task.retry.retries
-        self._retired_backoff_s += task.retry.backoff_total_s
+        """Garbage-collect a finished task's checkpoints.  (Retry and
+        backoff totals are counted at event time by the trace-event
+        hook, so there is nothing to fold here any more.)"""
         if self._gc is not None and self.cfg.gc_completed:
             self._gc.remove(task.task_id)
 
@@ -818,14 +1015,19 @@ class CoSearchService:
         scratch — a singleton run is bit-identical to its batch slice,
         so healthy requests still answer exactly; the poison request
         re-fails alone and quarantines without taking anyone with it."""
-        self._batch_splits += 1
+        self._c_splits.inc()
         self._tasks.remove(task)
         self._retire(task)
         for req in task.requests:
-            if req.request_id in self._outcomes:
+            rid = req.request_id
+            root = self._root_span.get(rid)
+            if root is not None:
+                self.tracer.add_event(root, "split",
+                                      task_id=task.task_id)
+            if rid in self._outcomes:
                 continue
             self._register_task(_BatchTask(self.cfg, task.workload, [req]))
-            self._n_batches += 1
+            self._c_batches.inc(kind="fused")
 
     def _quarantine(self, task, record: dict) -> None:
         """Finalize a poison task with a structured error outcome."""
@@ -835,10 +1037,16 @@ class CoSearchService:
             rid = req.request_id
             if rid in self._outcomes or rid in task.finalized:
                 continue
-            self._quarantined += 1
-            self._outcomes[rid] = SearchOutcome(
+            self._c_quarantined.inc()
+            root = self._root_span.get(rid)
+            if root is not None:
+                self.tracer.add_event(
+                    root, "quarantine",
+                    fault_class=record.get("fault_class"),
+                    type=record.get("type"))
+            self._finalize(rid, SearchOutcome(
                 request_id=rid, result=None, status="error",
-                error=record)
+                error=record))
 
     def drain(self) -> dict[str, SearchOutcome]:
         """Run every pending/in-flight request to completion (normal,
@@ -874,41 +1082,80 @@ class CoSearchService:
 
     def fault_stats(self) -> dict:
         """The serving-runtime fault section `benchmarks/serve.py`
-        publishes: retry/backoff totals (live + retired tasks),
-        quarantine/split/timeout/degradation counts, dedup hits, and
-        checkpoint-GC accounting."""
-        # retired (done) tasks already folded their counters in
-        live = [t for t in self._tasks if not t.done]
-        live_retries = sum(t.retry.retries for t in live)
-        live_backoff = sum(t.retry.backoff_total_s for t in live)
+        publishes — read straight off the metrics registry (the same
+        counters `/v1/metrics` exposes), plus checkpoint-GC
+        accounting."""
         return {
-            "retries": self._retired_retries + live_retries,
-            "backoff_s": self._retired_backoff_s + live_backoff,
-            "quarantined": self._quarantined,
-            "batch_splits": self._batch_splits,
-            "timeouts": self._timeouts,
-            "degraded_requests": self._degraded_requests,
-            "dedup_hits": self._dedup_hits,
+            "retries": int(self._c_retries.total()),
+            "backoff_s": self._c_backoff.total(),
+            "quarantined": int(self._c_quarantined.total()),
+            "batch_splits": int(self._c_splits.total()),
+            "timeouts": int(self._c_timeouts.total()),
+            "degraded_requests": int(self._c_degraded.total()),
+            "dedup_hits": int(self._c_dedup.total()),
             "checkpoint_gc": None if self._gc is None
             else self._gc.stats(),
         }
 
     def stats(self) -> dict:
-        """Serving health: engine-cache hit/miss/eviction counters,
-        batching composition, and the fault/retry section — the numbers
-        `benchmarks/serve.py` publishes to serve_metrics.json."""
+        """Serving health: engine-cache hit/miss/eviction/build-time
+        counters, batching composition, the fault/retry section, and a
+        telemetry summary — every count is a registry read, so this can
+        never disagree with `/v1/metrics`."""
         return {
             "engine_cache": engine_cache_stats(),
             "fleet_engine_cache": fleet_engine_cache_stats(),
-            "n_batches": self._n_batches,
-            "n_grouped_batches": self._n_grouped,
+            "n_batches": int(self._c_batches.total()),
+            "n_grouped_batches": int(self._c_batches.value(
+                kind="group")),
             "n_requests_done": len(self._outcomes),
             "n_requests_pending": len(self._pending)
             + sum(1 for t in self._tasks if not t.done
                   for r in t.requests
                   if r.request_id not in self._outcomes),
             "faults": self.fault_stats(),
+            "telemetry": {
+                "spans": len(self.tracer.spans()),
+                "spans_dropped": self.tracer.dropped,
+                "history_rows": len(self.history),
+                "history_dropped": self.history.dropped,
+            },
         }
+
+    # -- observability endpoints -------------------------------------------
+
+    def request_trace(self, request_id: str) -> dict | None:
+        """The rooted span tree of one request's lifecycle (submit →
+        queue wait → batch join → per-segment advances → drain, fault
+        events inline), or None for unknown ids."""
+        root = self._root_span.get(self._rid(request_id))
+        if root is None:
+            return None
+        return self.tracer.tree(root)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: the service registry (request /
+        fault / segment families) merged with the process-global one
+        (engine builds, checkpoint IO), plus engine-cache gauges
+        refreshed at scrape time."""
+        g_rate = self.metrics.gauge("engine_cache_hit_rate",
+                                    "engine-cache hit rate", ("cache",))
+        g_size = self.metrics.gauge("engine_cache_size",
+                                    "live engine-cache entries",
+                                    ("cache",))
+        g_build = self.metrics.gauge(
+            "engine_cache_build_seconds_total",
+            "summed engine build time per cache", ("cache",))
+        for name, st in (("search", engine_cache_stats()),
+                         ("fleet", fleet_engine_cache_stats())):
+            g_rate.set(st["hit_rate"], cache=name)
+            g_size.set(st["size"], cache=name)
+            g_build.set(st["build_seconds_total"], cache=name)
+        return _obs.render_prometheus(self.metrics, _obs.get_metrics())
+
+    def save_history(self, path) -> int:
+        """Persist the search-history store (npz); returns row count."""
+        return self.history.save(path)
 
 
 def _point_of(workload: Workload, cfg: SearchConfig, res):

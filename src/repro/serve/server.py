@@ -28,6 +28,13 @@ Endpoints (all JSON):
 * ``GET /v1/events/<request_id>`` — the streamed per-segment progress.
 * ``GET /v1/frontier`` — the service-wide Pareto frontier.
 * ``GET /v1/stats`` — engine-cache / batching / fault counters.
+* ``GET /v1/metrics`` — Prometheus text exposition (the one non-JSON
+  endpoint): request/fault/segment families from the service registry
+  merged with engine-build and checkpoint families from the
+  process-global one.
+* ``GET /v1/trace/<request_id>`` — the request's span tree (submit →
+  queue wait → batch join → per-segment advances → drain, with fault
+  events inline); 404 for unknown ids.
 * ``GET /v1/healthz`` — liveness.
 
 Request payload::
@@ -230,6 +237,15 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(blob)
 
+    def _reply_text(self, code: int, text: str) -> None:
+        blob = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(blob)))
+        self.end_headers()
+        self.wfile.write(blob)
+
     def do_POST(self):   # noqa: N802 (http.server API)
         if self.path != "/v1/search":
             self._reply(404, {"error": f"no such endpoint {self.path}"})
@@ -252,6 +268,12 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(200, app.stats_json())
         elif self.path == "/v1/frontier":
             self._reply(200, {"frontier": app.frontier_json()})
+        elif self.path == "/v1/metrics":
+            self._reply_text(200, app.metrics_text())
+        elif self.path.startswith("/v1/trace/"):
+            rid = self.path[len("/v1/trace/"):]
+            code, payload = app.trace_json(rid)
+            self._reply(code, payload)
         elif self.path.startswith("/v1/result/"):
             rid = self.path[len("/v1/result/"):]
             code, payload = app.result_json(rid)
@@ -375,6 +397,17 @@ class CoSearchServer:
     def stats_json(self) -> dict:
         with self._cond:
             return self.service.stats()
+
+    def metrics_text(self) -> str:
+        with self._cond:
+            return self.service.metrics_text()
+
+    def trace_json(self, rid: str) -> tuple[int, dict]:
+        with self._cond:
+            tree = self.service.request_trace(rid)
+        if tree is None:
+            return 404, {"error": f"unknown request_id {rid!r}"}
+        return 200, {"request_id": rid, "trace": tree}
 
     def frontier_json(self) -> list:
         with self._cond:

@@ -117,9 +117,26 @@ def test_unseeded_rng_and_wallclock_path_filtered():
             return x, t0
     """
     engine = _lint(src, "src/repro/core/engine.py")
-    assert _rules(engine) == ["ND201", "ND201", "ND202"]
-    # the same source outside engine paths is not ND2xx territory
-    assert not _lint(src, "src/repro/workloads/gen.py")
+    # the wall-clock read double-fires: ND202 (engine determinism) and
+    # OB601 (off-spine timing)
+    assert _rules(engine) == ["ND201", "ND201", "ND202", "OB601"]
+    # the same source outside engine paths is not ND2xx territory —
+    # only the spine-wide OB601 remains
+    assert _rules(_lint(src, "src/repro/workloads/gen.py")) == ["OB601"]
+
+
+def test_wallclock_outside_obs_excluded_paths():
+    src = """
+        import time
+        def f():
+            return time.monotonic()
+    """
+    # anywhere in src: OB601 (time through repro.obs instead)
+    assert _rules(_lint(src, "src/repro/launch/tools.py")) == ["OB601"]
+    # the telemetry spine itself owns the clock read
+    assert not _lint(src, "src/repro/obs/telemetry.py")
+    # benchmarks time wall-clock by design
+    assert not _lint(src, "benchmarks/common.py")
 
 
 def test_exception_swallow_vs_reraise():
@@ -168,7 +185,7 @@ def test_inline_suppression():
 
 def test_every_fired_rule_is_in_catalog():
     for rid in ("JX101", "JX102", "JX103", "JX104",
-                "ND201", "ND202", "EX301", "PY401"):
+                "ND201", "ND202", "EX301", "PY401", "OB601"):
         assert rid in RULES
         assert RULES[rid].message
 

@@ -182,3 +182,53 @@ def test_http_health_and_stats(server):
     faults = stats["faults"]
     assert faults["dedup_hits"] >= 1
     assert "retries" in faults and "quarantined" in faults
+    # engine-cache stats now carry per-entry build accounting
+    assert "build_seconds_total" in stats["engine_cache"]
+
+
+def test_http_metrics_prometheus(server):
+    """/v1/metrics speaks the Prometheus text exposition and carries
+    the request, fault and engine-cache families."""
+    srv, base = server
+    with urllib.request.urlopen(base + "/v1/metrics", timeout=30) as r:
+        assert r.status == 200
+        assert r.headers["Content-Type"].startswith("text/plain")
+        text = r.read().decode()
+    samples, types = {}, {}
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split()
+            types[name] = kind
+        elif line and not line.startswith("#"):
+            key, val = line.rsplit(" ", 1)
+            samples[key] = float(val)
+    assert types["serve_requests_submitted_total"] == "counter"
+    assert types["serve_request_seconds"] == "histogram"
+    assert types["engine_cache_hit_rate"] == "gauge"
+    assert samples["serve_requests_submitted_total"] >= 1.0
+    assert samples['serve_requests_completed_total{status="ok"}'] >= 1.0
+    assert samples["serve_dedup_hits_total"] >= 1.0
+    assert samples["serve_request_seconds_count"] >= 1.0
+    assert any(k.startswith("engine_build_total") for k in samples)
+
+
+def test_http_trace_span_tree_and_404(server):
+    """/v1/trace/<rid> returns the rooted lifecycle span tree; unknown
+    ids 404."""
+    srv, base = server
+    code, sub = _post(base, "/v1/search",
+                      {"workload": WL_JSON, "config": dict(CFG_JSON,
+                                                           seed=99)})
+    rid = sub["request_id"]
+    assert srv.wait_idle(timeout=300)
+    code, out = _get(base, f"/v1/trace/{rid}")
+    assert code == 200 and out["request_id"] == rid
+    tree = out["trace"]
+    assert tree["name"] == "request"
+    assert tree["attrs"]["request_id"] == rid
+    names = [e["name"] for e in tree["events"]]
+    assert names[0] == "submitted" and names[-1] == "drain"
+    kids = [c["name"] for c in tree["children"]]
+    assert kids[0] == "queue_wait"
+    assert kids.count("segment") == 2
+    assert _get(base, "/v1/trace/doesnotexist")[0] == 404
